@@ -1,0 +1,90 @@
+"""Kernel microbenchmarks: jnp-path timings + interpret-mode oracle checks.
+
+On this CPU container the Pallas kernels run in interpret mode (Python),
+so wall time is meaningful only for the jnp paths; the kernels are checked
+allclose against their oracles here and timed per call for bookkeeping.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Row = Tuple[str, float, str]
+
+
+def _time(f, *args, iters=5) -> float:
+    f(*args)  # compile
+    jax.block_until_ready(f(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = f(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    # flash attention jnp (custom VJP) vs dense
+    from repro.models.attention import dense_attention
+    from repro.models.flash import flash_attention
+    B, S, H, D = 2, 1024, 8, 64
+    ks = jax.random.split(jax.random.key(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (B, S, H, D), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (B, S, H, D), jnp.bfloat16)
+    f_flash = jax.jit(lambda q, k, v: flash_attention(q, k, v, causal=True))
+    f_dense = jax.jit(lambda q, k, v: dense_attention(q, k, v, causal=True))
+    us_f = _time(f_flash, q, k, v)
+    us_d = _time(f_dense, q, k, v)
+    err = float(jnp.max(jnp.abs(
+        f_flash(q, k, v).astype(jnp.float32)
+        - f_dense(q, k, v).astype(jnp.float32))))
+    rows.append(("kernel.flash_jnp_1k", us_f,
+                 f"dense={us_d:.0f}us maxerr={err:.3e}"))
+
+    # ssd chunked vs reference
+    from repro.models.ssm import ssd_chunked, ssd_reference
+    b, S2, H2, P2, N2 = 1, 2048, 8, 64, 64
+    ks = jax.random.split(jax.random.key(1), 5)
+    x = jax.random.normal(ks[0], (b, S2, H2, P2), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, S2, H2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H2,)) * 0.3)
+    Bm = jax.random.normal(ks[3], (b, S2, 1, N2))
+    Cm = jax.random.normal(ks[4], (b, S2, 1, N2))
+    f_chunk = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    f_ref = jax.jit(lambda *a: ssd_reference(*a)[0])
+    us_c = _time(f_chunk, x, dt, A, Bm, Cm)
+    us_r = _time(f_ref, x, dt, A, Bm, Cm)
+    rows.append(("kernel.ssd_chunked_2k", us_c,
+                 f"naive_scan={us_r:.0f}us speedup={us_r / us_c:.1f}x"))
+
+    # blob pack/unpack oracle paths
+    from repro.kernels.blob_pack.ops import pack_from_keys
+    T, d = 16384, 512
+    xt = jax.random.normal(jax.random.key(2), (T, d), jnp.bfloat16)
+    keys = jax.random.randint(jax.random.key(3), (T,), 0, 64)
+    f_pack = jax.jit(lambda x, k: pack_from_keys(
+        x, k, num_bins=64, capacity=512, use_pallas=False)[0])
+    us_p = _time(f_pack, xt, keys)
+    gbps = T * d * 2 / (us_p / 1e6) / 1e9
+    rows.append(("kernel.blob_pack_16k", us_p, f"{gbps:.1f}GB/s (jnp path)"))
+
+    # interpret-mode kernels (correctness-only timing)
+    from repro.kernels.flash_attention.kernel import flash_attention_pallas
+    q2 = q[:1, :256]
+    k2 = k[:1, :256]
+    v2 = v[:1, :256]
+    t0 = time.perf_counter()
+    out = flash_attention_pallas(q2, k2, v2, causal=True, interpret=True)
+    us_i = (time.perf_counter() - t0) * 1e6
+    ref = f_dense(q2, k2, v2)
+    err = float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                - ref.astype(jnp.float32))))
+    rows.append(("kernel.flash_pallas_interp", us_i,
+                 f"maxerr={err:.3e} (interpret mode)"))
+    return rows

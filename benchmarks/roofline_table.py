@@ -1,0 +1,65 @@
+"""Emit the EXPERIMENTS.md roofline tables from results/dryrun JSONs.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--mesh single]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.configs import ARCH_IDS, all_skips
+
+
+def load(out_dir, mesh):
+    d = os.path.join(out_dir, mesh)
+    cells = {}
+    if not os.path.isdir(d):
+        return cells
+    for name in sorted(os.listdir(d)):
+        if "__" not in name or name.count("__") > 1:
+            continue  # skip tagged perf-iteration runs
+        with open(os.path.join(d, name)) as f:
+            r = json.load(f)
+        cells[(r["arch"], r["shape"])] = r
+    return cells
+
+
+SHAPES = ("train_4k", "prefill_32k", "decode_32k", "long_500k")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--out", default="results/dryrun")
+    args = ap.parse_args()
+    cells = load(args.out, args.mesh)
+    skips = {(a, s): why for a, s, why in all_skips()}
+
+    print("| arch | shape | dominant | compute s | memory s | collective s"
+          " | step s | useful | roofline frac | peak GiB | fits |")
+    print("|---|---|---|---|---|---|---|---|---|---|---|")
+    for arch in ARCH_IDS:
+        for shape in SHAPES:
+            if (arch, shape) in skips:
+                why = skips[(arch, shape)]
+                print(f"| {arch} | {shape} | — | — | — | — | — | — | — | — |"
+                      f" SKIP: {why.split(';')[0][:40]} |")
+                continue
+            r = cells.get((arch, shape))
+            if r is None:
+                print(f"| {arch} | {shape} | MISSING | | | | | | | | |")
+                continue
+            rl = r["roofline"]
+            peak = r["memory"]["peak_est_bytes"] / 2**30
+            fits = "yes" if peak <= 16.0 else f"NO ({peak:.0f}G)"
+            print(f"| {arch} | {shape} | {rl['dominant'][:-2]} "
+                  f"| {rl['compute_s']:.3f} | {rl['memory_s']:.3f} "
+                  f"| {rl['collective_s']:.3f} | {rl['step_time_s']:.3f} "
+                  f"| {rl['useful_flops_ratio']:.2f} "
+                  f"| {rl['roofline_fraction']:.3f} | {peak:.1f} | {fits} |")
+
+
+if __name__ == "__main__":
+    main()

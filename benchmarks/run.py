@@ -1,0 +1,62 @@
+"""Benchmark harness — one suite per paper table/figure + the TPU
+adaptation and kernel microbenches. Prints ``name,us_per_call,derived``
+CSV (and a dry-run roofline summary if results/dryrun exists)."""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+
+def _dryrun_summary(out_dir="results/dryrun"):
+    rows = []
+    for mesh in ("single", "multi"):
+        d = os.path.join(out_dir, mesh)
+        if not os.path.isdir(d):
+            continue
+        for name in sorted(os.listdir(d)):
+            with open(os.path.join(d, name)) as f:
+                r = json.load(f)
+            rl = r["roofline"]
+            rows.append((f"dryrun.{mesh}.{r['arch']}.{r['shape']}",
+                         r["compile_s"] * 1e6,
+                         f"dom={rl['dominant'][:-2]} "
+                         f"step={rl['step_time_s']:.3f}s "
+                         f"frac={rl['roofline_fraction']:.3f} "
+                         f"mem={r['memory']['peak_est_bytes'] / 2**30:.1f}GiB"))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--suite", default="all",
+                    choices=["all", "paper", "tpu", "kernels", "dryrun"])
+    args = ap.parse_args()
+
+    rows = []
+    if args.suite in ("all", "paper"):
+        from benchmarks import paper_figs as F
+        rows += F.fig5_latency_cdf()
+        rows += F.fig6_batch_size()
+        rows += F.fig7_cost_latency()
+        rows += F.fig8_partitions()
+        rows += F.fig9_scalability()
+        rows += F.model_validation()
+    if args.suite in ("all", "tpu"):
+        from benchmarks import tpu_shuffle
+        rows += tpu_shuffle.run()
+    if args.suite in ("all", "kernels"):
+        from benchmarks import kernel_bench
+        rows += kernel_bench.run()
+    if args.suite in ("all", "dryrun"):
+        rows += _dryrun_summary()
+
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

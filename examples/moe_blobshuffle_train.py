@@ -1,0 +1,72 @@
+"""MoE training with the BlobShuffle expert dispatch on a multi-pod mesh.
+
+Runs a reduced DeepSeek-V2-style MoE on 8 simulated devices
+(2 pods x 2 data x 2 model) with the hierarchical blob shuffle and
+blob-bucketed int8 cross-pod gradient sync — the full paper technique,
+end to end, with loss decreasing.
+
+    PYTHONPATH=src python examples/moe_blobshuffle_train.py --steps 30
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+
+import argparse   # noqa: E402
+import sys        # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+
+from repro.configs import get_config                      # noqa: E402
+from repro.data import lm_batch_stream                    # noqa: E402
+from repro.launch.mesh import make_test_mesh              # noqa: E402
+from repro.models import lm                               # noqa: E402
+from repro.models.common import init_params               # noqa: E402
+from repro.shuffle.api import ShuffleConfig               # noqa: E402
+from repro.training import (OptConfig, TrainConfig, adamw_init,  # noqa: E402
+                            make_train_step)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--mode", default="blob",
+                    choices=["dense", "direct", "blob"])
+    ap.add_argument("--grad-sync", default="blob_int8",
+                    choices=["auto", "blob", "blob_int8"])
+    args = ap.parse_args()
+
+    mesh = make_test_mesh(devices=8)
+    print(f"mesh: {dict(mesh.shape)}  devices: {mesh.devices.size}")
+    cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+    params = init_params(lm.param_defs(cfg), jax.random.key(0))
+    opt = adamw_init(params)
+    shuf = ShuffleConfig(mode=args.mode,
+                         token_axes=("pod", "data", "model"),
+                         expert_axes=("pod", "model"),
+                         capacity_factor=2.0)
+    tcfg = TrainConfig(opt=OptConfig(learning_rate=3e-3, warmup_steps=5,
+                                     total_steps=args.steps),
+                       shuffle=shuf, grad_sync=args.grad_sync,
+                       grad_sync_blob_bytes=1 << 16)
+    step = jax.jit(make_train_step(cfg, tcfg, mesh=mesh))
+    batch_fn = lm_batch_stream(cfg.vocab_size, 8, 32)
+
+    losses = []
+    for i in range(args.steps):
+        params, opt, metrics = step(params, opt, batch_fn(i))
+        losses.append(float(metrics["loss"]))
+        if i % 5 == 0 or i == args.steps - 1:
+            print(f"step {i:3d} loss {losses[-1]:.4f} "
+                  f"aux {float(metrics['aux_loss']):.5f} "
+                  f"gnorm {float(metrics['grad_norm']):.3f}")
+    assert sum(losses[-5:]) < sum(losses[:5]), "loss did not decrease"
+    print(f"OK mode={args.mode} grad_sync={args.grad_sync} "
+          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+"""Batched serving: prefill a batch of prompts, then decode with KV cache.
+
+    PYTHONPATH=src python examples/serve_batch.py --arch gemma-2b --tokens 32
+"""
+
+import argparse
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.common import init_params
+from repro.serving import ServeConfig, make_decode_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="gemma-2b")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=12)
+    ap.add_argument("--tokens", type=int, default=32)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, smoke=True)
+    assert cfg.has_decode, f"{args.arch} is encoder-only"
+    params = init_params(lm.param_defs(cfg), jax.random.key(0))
+    B = args.batch
+    max_seq = args.prompt_len + args.tokens
+    cache = jax.tree.map(
+        jnp.zeros_like,
+        init_params(lm.cache_defs(cfg, B, max_seq), jax.random.key(1)))
+    serve_step = jax.jit(make_decode_step(cfg, ServeConfig()))
+
+    prompts = jax.random.randint(jax.random.key(2), (B, args.prompt_len),
+                                 0, cfg.vocab_size)
+    # prefill via the decode path (teacher-forced) to fill the cache
+    tok = prompts[:, :1]
+    for t in range(args.prompt_len):
+        cache, nxt, _ = serve_step(params, cache,
+                                   {"tokens": prompts[:, t:t + 1],
+                                    "pos": jnp.int32(t)})
+    # autoregressive decode
+    out = [nxt]
+    t0 = time.time()
+    for t in range(args.prompt_len, max_seq - 1):
+        cache, nxt, _ = serve_step(params, cache,
+                                   {"tokens": out[-1][:, None],
+                                    "pos": jnp.int32(t)})
+        out.append(nxt)
+    jax.block_until_ready(out[-1])
+    dt = time.time() - t0
+    gen = jnp.stack(out, axis=1)
+    tps = (gen.shape[1] - 1) * B / dt
+    print(f"arch={cfg.name} batch={B} generated {gen.shape[1]} tokens/seq "
+          f"({tps:.1f} tok/s on CPU)")
+    print("sample token ids:", gen[0, :16].tolist())
+    assert bool(jnp.all(gen >= 0)) and bool(jnp.all(gen < cfg.vocab_size))
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+from repro.checkpoint.blobstore_ckpt import (BlobCheckpointer, FileStore,
+                                             latest_step)

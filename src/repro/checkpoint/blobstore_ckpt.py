@@ -1,0 +1,184 @@
+"""Checkpointing through the BlobShuffle storage pattern.
+
+The paper's commit protocol, reused for fault tolerance: every array leaf
+is uploaded as a **blob**; the **manifest** (the "notification") is written
+only after all blob uploads are durable. A crash mid-checkpoint leaves
+orphaned blobs — harmless and unreachable, collected by retention —
+never a corrupt checkpoint. Restore trusts manifests only.
+
+* ``FileStore`` — filesystem-backed object store (same interface shape as
+  the simulated S3; blobs are content-addressed under ``objects/``).
+* ``BlobCheckpointer`` — save/restore of arbitrary pytrees with optional
+  **async** upload (background thread — overlaps training compute) and
+  **elastic restore**: arrays are stored whole, so restoring onto a
+  different mesh/sharding (different DP/TP size) is a device_put with the
+  new shardings.
+"""
+
+from __future__ import annotations
+
+import io
+import json
+import os
+import threading
+import time
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+PyTree = Any
+
+
+class FileStore:
+    """Append-only object store on the filesystem (durable blob tier)."""
+
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, "objects"), exist_ok=True)
+        os.makedirs(os.path.join(root, "manifests"), exist_ok=True)
+
+    def put(self, blob_id: str, data: bytes) -> None:
+        path = os.path.join(self.root, "objects", blob_id)
+        tmp = path + ".tmp"
+        with open(tmp, "wb") as f:
+            f.write(data)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)  # atomic: a blob either exists fully or not
+
+    def get(self, blob_id: str) -> bytes:
+        with open(os.path.join(self.root, "objects", blob_id), "rb") as f:
+            return f.read()
+
+    def put_manifest(self, name: str, manifest: dict) -> None:
+        path = os.path.join(self.root, "manifests", name)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        os.replace(tmp, path)
+
+    def get_manifest(self, name: str) -> Optional[dict]:
+        path = os.path.join(self.root, "manifests", name)
+        if not os.path.exists(path):
+            return None
+        with open(path) as f:
+            return json.load(f)
+
+    def manifests(self) -> List[str]:
+        return sorted(os.listdir(os.path.join(self.root, "manifests")))
+
+    def run_retention(self) -> int:
+        """GC blobs unreachable from any manifest (orphans from crashes)."""
+        live = set()
+        for name in self.manifests():
+            m = self.get_manifest(name)
+            live.update(e["blob"] for e in m["leaves"])
+        removed = 0
+        objdir = os.path.join(self.root, "objects")
+        for blob in os.listdir(objdir):
+            if blob not in live and not blob.endswith(".tmp"):
+                os.remove(os.path.join(objdir, blob))
+                removed += 1
+        return removed
+
+
+def _encode(arr: np.ndarray) -> bytes:
+    """Raw little-endian bytes (dtype/shape live in the manifest) — this
+    covers ml_dtypes types (bfloat16, fp8) that np.save cannot roundtrip."""
+    return arr.tobytes()
+
+
+def _decode(data: bytes, shape, dtype_str: str) -> np.ndarray:
+    import ml_dtypes  # registered extension dtypes (bfloat16, ...)
+    try:
+        dt = np.dtype(dtype_str)
+    except TypeError:
+        dt = np.dtype(getattr(ml_dtypes, dtype_str))
+    return np.frombuffer(data, dtype=dt).reshape(shape)
+
+
+class BlobCheckpointer:
+    def __init__(self, store: FileStore, *, async_upload: bool = True):
+        self.store = store
+        self.async_upload = async_upload
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- write path ------------------------------------------------------
+    def save(self, step: int, tree: PyTree, *, crash_before_manifest=False):
+        """Upload all leaves as blobs, then commit the manifest.
+
+        ``crash_before_manifest`` (tests): simulate a failure after the
+        blob uploads but before the manifest write — the checkpoint must
+        NOT become visible.
+        """
+        self.wait()
+        leaves, treedef = jax.tree.flatten(tree)
+        host = [np.asarray(l) for l in leaves]  # device→host copy now
+
+        def work():
+            entries = []
+            for i, arr in enumerate(host):
+                blob_id = f"step{step:08d}_leaf{i:05d}.npy"
+                self.store.put(blob_id, _encode(arr))
+                entries.append({"blob": blob_id,
+                                "shape": list(arr.shape),
+                                "dtype": str(arr.dtype)})
+            if crash_before_manifest:
+                return  # blobs become orphans; manifest never written
+            manifest = {"step": step, "treedef": str(treedef),
+                        "leaves": entries, "time": time.time()}
+            self.store.put_manifest(f"step{step:08d}.json", manifest)
+
+        if self.async_upload:
+            def run():
+                try:
+                    work()
+                except BaseException as e:  # surfaced on next wait()
+                    self._error = e
+            self._thread = threading.Thread(target=run, daemon=True)
+            self._thread.start()
+        else:
+            work()
+
+    def wait(self):
+        """Block until the in-flight checkpoint is durable (commit)."""
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            e, self._error = self._error, None
+            raise e
+
+    # -- read path ---------------------------------------------------------
+    def restore(self, step: int, like: PyTree, *, shardings: PyTree = None
+                ) -> PyTree:
+        """Restore into the structure of ``like``; optionally device_put
+        with (possibly different — elastic) shardings."""
+        m = self.store.get_manifest(f"step{step:08d}.json")
+        if m is None:
+            raise FileNotFoundError(f"no committed checkpoint for {step}")
+        leaves, treedef = jax.tree.flatten(like)
+        assert len(leaves) == len(m["leaves"]), "tree structure changed"
+        out = []
+        for ref, entry in zip(leaves, m["leaves"]):
+            assert list(ref.shape) == entry["shape"], \
+                f"shape mismatch {ref.shape} vs {entry['shape']}"
+            arr = _decode(self.store.get(entry["blob"]), entry["shape"],
+                          entry["dtype"])
+            out.append(arr)
+        tree = jax.tree.unflatten(treedef, out)
+        if shardings is not None:
+            tree = jax.tree.map(
+                lambda a, s: jax.device_put(a, s), tree, shardings)
+        return tree
+
+
+def latest_step(store: FileStore) -> Optional[int]:
+    names = store.manifests()
+    if not names:
+        return None
+    return max(int(n[4:12]) for n in names)

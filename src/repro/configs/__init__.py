@@ -1,0 +1,57 @@
+"""Architecture registry: ``get_config("<arch-id>")`` / ``--arch <id>``.
+
+Ten assigned architectures (see DESIGN.md §4), each with its exact
+published config and a reduced SMOKE variant of the same family.
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import (ALL_SHAPES, ModelConfig, ShapeConfig,
+                                 applicable_shapes, skipped_shapes)
+
+ARCH_MODULES: Dict[str, str] = {
+    "hubert-xlarge": "repro.configs.hubert_xlarge",
+    "mamba2-130m": "repro.configs.mamba2_130m",
+    "starcoder2-3b": "repro.configs.starcoder2_3b",
+    "gemma-2b": "repro.configs.gemma_2b",
+    "qwen2-72b": "repro.configs.qwen2_72b",
+    "granite-3-2b": "repro.configs.granite_3_2b",
+    "deepseek-v2-lite-16b": "repro.configs.deepseek_v2_lite_16b",
+    "qwen2-moe-a2.7b": "repro.configs.qwen2_moe_a2_7b",
+    "llava-next-34b": "repro.configs.llava_next_34b",
+    "zamba2-2.7b": "repro.configs.zamba2_2_7b",
+}
+
+ARCH_IDS: List[str] = list(ARCH_MODULES)
+
+
+def get_config(arch: str, *, smoke: bool = False) -> ModelConfig:
+    if arch not in ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {ARCH_IDS}")
+    mod = importlib.import_module(ARCH_MODULES[arch])
+    return mod.SMOKE if smoke else mod.CONFIG
+
+
+def get_shape(name: str) -> ShapeConfig:
+    for s in ALL_SHAPES:
+        if s.name == name:
+            return s
+    raise KeyError(f"unknown shape {name!r}")
+
+
+def all_cells():
+    """Every applicable (arch, shape) dry-run cell."""
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            yield arch, shape.name
+
+
+def all_skips():
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for name, why in skipped_shapes(cfg):
+            yield arch, name, why

@@ -1,0 +1,20 @@
+"""Paper-faithful BlobShuffle: records → Batcher → object store (+caches)
+→ notifications → Debatcher, with the §4 analytical model, calibrated
+capacity/latency models, and the §5 discrete-event simulator."""
+
+from repro.core.records import (Record, serialize, deserialize,
+                                deserialize_all, default_partitioner)
+from repro.core.blob import (Blob, BlobIndex, ByteRange, Notification,
+                             build_blob, extract)
+from repro.core.store import SimulatedS3, LatencyModel, StoreCosts
+from repro.core.cache import (LRUCache, SingleFlight, DistributedCache,
+                              LocalCache)
+from repro.core.batcher import Batcher, BlobShuffleConfig
+from repro.core.debatcher import Debatcher
+from repro.core.commit import CommitCoordinator
+from repro.core.pipeline import BlobShufflePipeline
+from repro.core.analytical import ModelParams
+from repro.core.capacity import CapacityModel
+from repro.core.costs import (AwsPrices, blobshuffle_cost_per_hour,
+                              kafka_shuffle_cost_per_hour)
+from repro.core.simulator import SimConfig, SimResult, simulate

@@ -1,0 +1,138 @@
+"""Batcher operator (paper §3.1, Fig. 2).
+
+Per destination partition, an in-memory buffer of serialized records;
+buffers of partitions in the same destination AZ are grouped so the
+accumulated size per AZ is tracked. A batch is finalized when
+  (i)  the target batch size is reached,
+  (ii) the max batching interval elapses, or
+  (iii) a commit is initiated.
+Finalized blobs upload asynchronously; an internal completion queue is
+polled from the processing loop; per contributing partition a notification
+is emitted. Commits block until all uploads completed + notifications sent.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.blob import Blob, Notification, build_blob
+from repro.core.cache import DistributedCache
+from repro.core.records import Record, serialized_size
+
+
+@dataclasses.dataclass(frozen=True)
+class BlobShuffleConfig:
+    """Mirrors the constructor arguments in Listing 1."""
+    batch_bytes: int = 16 * 1024 * 1024
+    max_interval_s: float = 5.0
+    num_partitions: int = 9
+    num_az: int = 3
+    cache_on_write: bool = True
+    local_cache_bytes: int = 0           # 0 = disabled (paper default)
+    distributed_cache_bytes: int = 4 * 1024 ** 3
+    retention_s: float = 3600.0
+
+
+@dataclasses.dataclass
+class PendingUpload:
+    blob: Blob
+    notifications: List[Notification]
+    started_at: float
+    completes_at: float
+
+
+@dataclasses.dataclass
+class BatcherStats:
+    records_in: int = 0
+    bytes_in: int = 0
+    blobs: int = 0
+    blob_bytes: int = 0
+    notifications: int = 0
+    finalize_size: int = 0
+    finalize_interval: int = 0
+    finalize_commit: int = 0
+
+
+class Batcher:
+    """One Batcher per stream thread (buffers shared across its tasks)."""
+
+    def __init__(self, cfg: BlobShuffleConfig,
+                 partition_to_az: Callable[[int], int],
+                 partitioner: Callable[[bytes], int],
+                 cache: DistributedCache):
+        self.cfg = cfg
+        self.partition_to_az = partition_to_az
+        self.partitioner = partitioner
+        self.cache = cache
+        # az -> partition -> [records]; az -> bytes
+        self.buffers: Dict[int, Dict[int, List[Record]]] = {}
+        self.buffer_bytes: Dict[int, int] = {}
+        self.last_finalize: Dict[int, float] = {}
+        self.pending: List[PendingUpload] = []
+        self.ready: List[Notification] = []
+        self.stats = BatcherStats()
+
+    # -- main processing loop ---------------------------------------------
+    def process(self, rec: Record, now: float) -> List[Notification]:
+        """Route one record into its per-partition buffer; poll completions."""
+        part = self.partitioner(rec.key)
+        az = self.partition_to_az(part)
+        buf = self.buffers.setdefault(az, {})
+        buf.setdefault(part, []).append(rec)
+        sz = serialized_size(rec)
+        self.buffer_bytes[az] = self.buffer_bytes.get(az, 0) + sz
+        self.stats.records_in += 1
+        self.stats.bytes_in += sz
+        self.last_finalize.setdefault(az, now)
+
+        if self.buffer_bytes[az] >= self.cfg.batch_bytes:
+            self._finalize(az, now, "size")
+        elif now - self.last_finalize[az] >= self.cfg.max_interval_s:
+            self._finalize(az, now, "interval")
+        return self.poll(now)
+
+    def poll(self, now: float) -> List[Notification]:
+        """Drain the upload-completion queue (processed from the main
+        thread, like the paper's internal result queue)."""
+        done = [p for p in self.pending if p.completes_at <= now]
+        self.pending = [p for p in self.pending if p.completes_at > now]
+        out = list(self.ready)
+        self.ready.clear()
+        for p in done:
+            out.extend(p.notifications)
+            self.stats.notifications += len(p.notifications)
+        return out
+
+    # -- commit protocol ----------------------------------------------------
+    def on_commit(self, now: float) -> Tuple[List[Notification], float]:
+        """Finalize all buffers and BLOCK until outstanding uploads are
+        durable; returns (notifications, commit-block seconds)."""
+        for az in list(self.buffers):
+            if self.buffer_bytes.get(az, 0) > 0:
+                self._finalize(az, now, "commit")
+        block_until = max((p.completes_at for p in self.pending),
+                          default=now)
+        notes: List[Notification] = []
+        for p in self.pending:
+            notes.extend(p.notifications)
+            self.stats.notifications += len(p.notifications)
+        self.pending.clear()
+        notes.extend(self.ready)
+        self.ready.clear()
+        return notes, max(0.0, block_until - now)
+
+    # -- internals -----------------------------------------------------------
+    def _finalize(self, az: int, now: float, why: str) -> None:
+        parts = self.buffers.pop(az, {})
+        self.buffer_bytes[az] = 0
+        self.last_finalize[az] = now
+        if not parts:
+            return
+        blob, notes = build_blob(parts, target_az=az)
+        lat = self.cache.write(blob.blob_id, blob.payload, now)
+        self.pending.append(PendingUpload(blob, notes, now, now + lat))
+        self.stats.blobs += 1
+        self.stats.blob_bytes += blob.size
+        setattr(self.stats, f"finalize_{why}",
+                getattr(self.stats, f"finalize_{why}") + 1)

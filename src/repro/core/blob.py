@@ -1,0 +1,88 @@
+"""Blob format: concatenated per-partition buffers + byte-range index.
+
+A finalized batch ("blob") is a single byte buffer composed of the
+per-partition byte buffers, such that records for a given partition appear
+sequentially within the blob (paper §3.1). The index maps partition id to
+its byte range; notifications carry ``(blob_id, partition, range)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import uuid
+from typing import Dict, Iterable, List, Optional, Tuple
+
+from repro.core.records import Record, deserialize_all, serialize
+
+
+@dataclasses.dataclass(frozen=True)
+class ByteRange:
+    offset: int
+    length: int
+
+    @property
+    def end(self) -> int:
+        return self.offset + self.length
+
+
+@dataclasses.dataclass(frozen=True)
+class BlobIndex:
+    """partition id -> byte range within the blob payload."""
+    ranges: Dict[int, ByteRange]
+
+    def partitions(self) -> List[int]:
+        return sorted(self.ranges)
+
+
+@dataclasses.dataclass(frozen=True)
+class Blob:
+    blob_id: str
+    payload: bytes
+    index: BlobIndex
+    target_az: int
+
+    @property
+    def size(self) -> int:
+        return len(self.payload)
+
+
+@dataclasses.dataclass(frozen=True)
+class Notification:
+    """Compact reference flowing through the messaging layer (paper Fig 2)."""
+    blob_id: str
+    partition: int
+    byte_range: ByteRange
+    target_az: int
+
+    @property
+    def size(self) -> int:
+        return 48  # uuid + partition + range + az (wire estimate)
+
+
+def new_blob_id() -> str:
+    return uuid.uuid4().hex
+
+
+def build_blob(per_partition: Dict[int, List[Record]], target_az: int,
+               blob_id: Optional[str] = None) -> Tuple[Blob, List[Notification]]:
+    """Concatenate per-partition record buffers into one blob + notifications."""
+    bid = blob_id or new_blob_id()
+    chunks: List[bytes] = []
+    ranges: Dict[int, ByteRange] = {}
+    off = 0
+    for part in sorted(per_partition):
+        buf = b"".join(serialize(r) for r in per_partition[part])
+        if not buf:
+            continue
+        chunks.append(buf)
+        ranges[part] = ByteRange(off, len(buf))
+        off += len(buf)
+    blob = Blob(bid, b"".join(chunks), BlobIndex(ranges), target_az)
+    notes = [Notification(bid, p, r, target_az)
+             for p, r in sorted(ranges.items())]
+    return blob, notes
+
+
+def extract(payload: bytes, rng: ByteRange) -> List[Record]:
+    """Debatch one partition's records from a blob payload (or sub-blob)."""
+    return deserialize_all(payload[rng.offset:rng.end])

@@ -1,0 +1,98 @@
+"""BlobShuffle pipeline facade — the add-on API of Listing 1, runnable as
+a single-process, multi-instance topology (used by examples and tests).
+
+    shuffle = BlobShufflePipeline(config)
+    out = shuffle.run(records)   # records routed to per-partition outputs
+
+Internally: per-instance Batchers → simulated S3 + per-AZ distributed
+caches (+ optional local caches) → per-AZ Debatchers, with periodic
+commits through the CommitCoordinator.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.batcher import Batcher, BlobShuffleConfig
+from repro.core.blob import Notification
+from repro.core.cache import DistributedCache, LocalCache
+from repro.core.commit import CommitCoordinator
+from repro.core.debatcher import Debatcher
+from repro.core.records import Record, default_partitioner
+from repro.core.store import SimulatedS3
+
+
+class BlobShufflePipeline:
+    def __init__(self, cfg: BlobShuffleConfig, *, n_instances: int = 3,
+                 store: Optional[SimulatedS3] = None, seed: int = 0,
+                 exactly_once: bool = True):
+        self.cfg = cfg
+        self.n_instances = n_instances
+        self.store = store or SimulatedS3(seed=seed,
+                                          retention_s=cfg.retention_s)
+        self.caches = [
+            DistributedCache(az, max(n_instances // cfg.num_az, 1),
+                             cfg.distributed_cache_bytes, self.store,
+                             cfg.cache_on_write)
+            for az in range(cfg.num_az)]
+        self.notifications: List[Notification] = []
+        self.batchers: List[Batcher] = []
+        self.coordinators: List[CommitCoordinator] = []
+        self.debatchers: List[Debatcher] = []
+        for az in range(cfg.num_az):
+            local = (LocalCache(cfg.local_cache_bytes, self.caches[az])
+                     if cfg.local_cache_bytes else None)
+            self.debatchers.append(
+                Debatcher(az, self.caches[az], local,
+                          exactly_once=exactly_once))
+        for i in range(n_instances):
+            az = i % cfg.num_az
+            b = Batcher(cfg, self.partition_to_az,
+                        lambda key: default_partitioner(
+                            key, cfg.num_partitions),
+                        self.caches[az])
+            self.batchers.append(b)
+            self.coordinators.append(
+                CommitCoordinator(b, self.debatchers,
+                                  self.notifications.append))
+
+    def partition_to_az(self, partition: int) -> int:
+        return partition % self.cfg.num_az
+
+    def run(self, records: List[Record], *, now: float = 0.0,
+            commit_every: Optional[int] = None,
+            fail_instance_before_commit: Optional[int] = None
+            ) -> Dict[int, List[Record]]:
+        """Push records round-robin through instances; commit; debatch.
+
+        ``fail_instance_before_commit``: inject a crash on that instance
+        right before the first commit (its uncommitted records replay —
+        at-least-once upstream, exactly-once downstream via dedup).
+        """
+        t = now
+        pending_replay: List[Record] = []
+        for i, rec in enumerate(records):
+            inst = i % self.n_instances
+            self.coordinators[inst].process(rec, t)
+            t += 1e-6
+            if commit_every and (i + 1) % commit_every == 0:
+                if fail_instance_before_commit is not None:
+                    replay = self.coordinators[
+                        fail_instance_before_commit].fail_and_restart(t)
+                    pending_replay.extend(replay)
+                    fail_instance_before_commit = None
+                for c in self.coordinators:
+                    t += c.commit(t)
+        for i, rec in enumerate(pending_replay):
+            self.coordinators[i % self.n_instances].process(rec, t)
+            t += 1e-6
+        for c in self.coordinators:
+            t += c.commit(t)
+        # read path: deliver notifications to the target AZ's debatcher
+        out: Dict[int, List[Record]] = defaultdict(list)
+        for note in self.notifications:
+            recs, _, _ = self.debatchers[note.target_az].process(note, t)
+            out[note.partition].extend(recs)
+        return dict(out)

@@ -1,0 +1,2 @@
+from repro.data.generator import (LoadGenerator, lm_batch_stream,
+                                  shufflebench_records)

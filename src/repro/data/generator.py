@@ -1,0 +1,77 @@
+"""Data pipeline: ShuffleBench-style load generator + LM token streams.
+
+* ``shufflebench_records`` — the paper's benchmark workload: records with
+  random byte values; the key is derived from the first 8 bytes of the
+  value (paper §5.1.1 step ii); a timestamp is written into the tail of
+  the value (step iii) for latency measurement.
+* ``LoadGenerator`` — rate-capped generator (ad-hoc throughput method:
+  offered load above the system's capacity).
+* ``lm_batch_stream`` — deterministic, step-keyed synthetic token batches
+  for the training examples (step-keyed ⇒ restarts replay identically —
+  the property the fault-tolerance tests rely on).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Iterator, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.records import Record
+
+
+def shufflebench_records(n: int, value_bytes: int = 1024, seed: int = 0,
+                         t0_us: int = 0) -> List[Record]:
+    rng = np.random.default_rng(seed)
+    out = []
+    vals = rng.bytes(n * value_bytes)
+    for i in range(n):
+        v = vals[i * value_bytes:(i + 1) * value_bytes]
+        out.append(Record(key=v[:8], value=v, timestamp_us=t0_us + i))
+    return out
+
+
+@dataclasses.dataclass
+class LoadGenerator:
+    """Per-instance generator emitting up to ``rate`` records/s."""
+    rate: float = 180_000.0
+    value_bytes: int = 1024
+    seed: int = 0
+
+    def window(self, t_start: float, t_end: float) -> List[Record]:
+        n = int((t_end - t_start) * self.rate)
+        return shufflebench_records(n, self.value_bytes, seed=self.seed,
+                                    t0_us=int(t_start * 1e6))
+
+
+def lm_batch_stream(vocab_size: int, batch: int, seq: int,
+                    *, multimodal=None, d_model: int = 0):
+    """Returns batch_fn(step) -> training batch (tokens+labels or
+    frames/patches for the stub-frontend archs)."""
+    def batch_fn(step: int) -> Dict[str, jax.Array]:
+        k = jax.random.key(step)
+        ks = jax.random.split(k, 3)
+        if multimodal is not None and multimodal.kind == "audio":
+            return {
+                "frames": jax.random.normal(ks[0], (batch, seq, d_model),
+                                            jnp.bfloat16),
+                "labels": jax.random.randint(ks[1], (batch, seq), 0,
+                                             vocab_size),
+            }
+        if multimodal is not None and multimodal.kind == "vision":
+            P = multimodal.num_patches
+            labels = jax.random.randint(ks[2], (batch, seq), 0, vocab_size)
+            labels = labels.at[:, :P].set(-100)  # no loss on patches
+            return {
+                "tokens": jax.random.randint(ks[0], (batch, seq - P), 0,
+                                             vocab_size),
+                "patches": jax.random.normal(ks[1], (batch, P, d_model),
+                                             jnp.bfloat16),
+                "labels": labels,
+            }
+        toks = jax.random.randint(ks[0], (batch, seq + 1), 0, vocab_size)
+        return {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    return batch_fn

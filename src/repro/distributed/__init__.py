@@ -1,0 +1,2 @@
+from repro.distributed.sharding import (ShardingRules, partition_spec,
+                                        named_shardings, DEFAULT_RULES)

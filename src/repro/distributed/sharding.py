@@ -1,0 +1,104 @@
+"""Logical-axis → mesh-axis sharding rules with divisibility fallback.
+
+Every array in the framework carries *logical* axis names on its ArraySpec
+(see ``repro.models.common``). A ``ShardingRules`` table maps those names to
+mesh axes; ``partition_spec`` applies the table with two safety rails:
+
+  * a mesh axis is used at most once per tensor (PartitionSpec constraint),
+  * an axis is only applied if the dimension is divisible by the mesh-axis
+    product so far (e.g. 8 kv-heads on a 16-way model axis ⇒ replicated).
+
+This is what lets one config express qwen2-72b (FSDP+TP), gemma-2b (MQA),
+deepseek (EP) and the decode cells (batch=1) without per-arch sharding code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ArraySpec, is_spec
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Map logical axis name -> tuple of mesh axes (in order of preference)."""
+    rules: Dict[str, Tuple[str, ...]]
+
+    def get(self, name) -> Tuple[str, ...]:
+        if name is None:
+            return ()
+        r = self.rules.get(name, ())
+        return (r,) if isinstance(r, str) else tuple(r)
+
+    def override(self, **kw) -> "ShardingRules":
+        new = dict(self.rules)
+        for k, v in kw.items():
+            new[k] = v
+        return ShardingRules(new)
+
+
+# Default parameter/activation rules for the (pod, data, model) mesh family.
+#   - FSDP (ZeRO-3): weight d_model ("embed") dims sharded over "data";
+#     XLA all-gathers per layer inside the scan and overlaps with compute.
+#   - TP: heads / mlp hidden / vocab over "model".
+#   - EP: experts over ("pod", "model") — the BlobShuffle domain.
+#   - batch over ("pod", "data"); kv_seq over "model" is enabled per-cell in
+#     the perf pass (flash-decode style sequence sharding).
+DEFAULT_RULES = ShardingRules({
+    "vocab": ("model",),
+    "embed": ("data",),
+    "kv_embed": ("data",),
+    "mlp": ("model",),
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "experts": ("pod", "model"),
+    "expert_mlp": (),
+    "layers": (),
+    "stack": (),
+    "batch": ("pod", "data"),
+    "seq": (),
+    "kv_seq": (),
+})
+
+
+def partition_spec(spec: ArraySpec, rules: ShardingRules, mesh: Mesh) -> P:
+    used = set()
+    parts = []
+    axes = spec.axes or (None,) * len(spec.shape)
+    for dim, name in zip(spec.shape, axes):
+        chosen = []
+        prod = 1
+        for mesh_ax in rules.get(name):
+            if mesh_ax in used or mesh_ax not in mesh.shape:
+                continue
+            size = mesh.shape[mesh_ax]
+            if size > 1 and dim % (prod * size) == 0:
+                chosen.append(mesh_ax)
+                used.add(mesh_ax)
+                prod *= size
+        parts.append(tuple(chosen) if len(chosen) > 1
+                     else (chosen[0] if chosen else None))
+    return P(*parts)
+
+
+def named_shardings(defs, rules: ShardingRules, mesh: Mesh):
+    """ArraySpec tree -> NamedSharding tree."""
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, partition_spec(s, rules, mesh)),
+        defs, is_leaf=is_spec)
+
+
+def constrain(x, spec: ArraySpec, rules: ShardingRules, mesh: Mesh):
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, partition_spec(spec, rules, mesh)))
+
+
+def batch_specs(shapes: Dict[str, ArraySpec], rules: ShardingRules,
+                mesh: Mesh):
+    return {k: NamedSharding(mesh, partition_spec(s, rules, mesh))
+            for k, s in shapes.items()}

@@ -1,0 +1,61 @@
+"""Pallas TPU kernel for blob_pack (Batcher gather into blob layout).
+
+Grid: (bins, ceil(capacity / ROW_TILE)). Each program instance materializes
+ROW_TILE destination rows of one bin in VMEM by dynamically gathering
+token rows from the token array, masking rows past the bin's demand. The
+feature dim is kept whole per row (d ≤ a few K → ROW_TILE × d tiles sit
+comfortably in VMEM and are lane-aligned for the VPU).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+
+
+def _make_kernel(capacity: int, row_tile: int):
+    def kernel(order_ref, starts_ref, counts_ref, x_ref, out_ref):
+        b = pl.program_id(0)
+        t = pl.program_id(1)
+        start = starts_ref[b]
+        count = jnp.minimum(counts_ref[b], capacity)
+        U = order_ref.shape[0]
+
+        def body(i, _):
+            r = t * row_tile + i                    # row within the bin
+            pos = jnp.clip(start + r, 0, U - 1)
+            tok = order_ref[pos]
+            row = x_ref[tok, :]
+            row = jnp.where(r < count, row, jnp.zeros_like(row))
+            out_ref[0, i, :] = row
+            return 0
+
+        jax.lax.fori_loop(0, row_tile, body, 0)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def blob_pack_pallas(x, order, starts, counts, *, capacity: int,
+                     interpret: bool = True):
+    bins = starts.shape[0]
+    d = x.shape[-1]
+    row_tile = min(ROW_TILE, capacity)
+    grid = (bins, -(-capacity // row_tile))
+    return pl.pallas_call(
+        _make_kernel(capacity, row_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(order.shape, lambda b, t: (0,)),      # full order
+            pl.BlockSpec(starts.shape, lambda b, t: (0,)),
+            pl.BlockSpec(counts.shape, lambda b, t: (0,)),
+            pl.BlockSpec(x.shape, lambda b, t: (0, 0)),        # tokens
+        ],
+        out_specs=pl.BlockSpec((1, row_tile, d), lambda b, t: (b, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((bins, capacity, d), x.dtype),
+        interpret=interpret,
+    )(order, starts, counts, x)

@@ -1,0 +1,46 @@
+"""Public op: blob_pack — jitted wrapper choosing Pallas (TPU) vs oracle.
+
+Also provides ``pack_from_keys`` which computes the sorted-order inputs
+(argsort by destination) the way the shuffle layer does, so callers can go
+straight from (tokens, destination keys) to the blob layout.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.blob_pack.kernel import blob_pack_pallas
+from repro.kernels.blob_pack.ref import blob_pack_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_pallas"))
+def blob_pack(x, order, starts, counts, *, capacity: int,
+              use_pallas: bool = None):
+    """(T,d) tokens + sorted-order description -> (bins, capacity, d)."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return blob_pack_pallas(x, order, starts, counts,
+                                capacity=capacity,
+                                interpret=not _on_tpu())
+    return blob_pack_ref(x, order, starts, counts, capacity=capacity)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "capacity",
+                                             "use_pallas"))
+def pack_from_keys(x, keys, *, num_bins: int, capacity: int,
+                   use_pallas: bool = None):
+    """Convenience: bin tokens by destination key and pack into blobs."""
+    order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    counts = jnp.bincount(keys, length=num_bins).astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    return blob_pack(x, order, starts, counts, capacity=capacity,
+                     use_pallas=use_pallas), (order, starts, counts)

@@ -1,0 +1,31 @@
+"""Pure-jnp oracle for blob_pack: gather sorted tokens into bin layout.
+
+blob_pack turns per-token rows into the contiguous per-destination blob
+layout used by the shuffle (the Batcher hot path). Inputs are the
+*sorted-order* description produced by repro.shuffle.binning:
+
+  x       (T, d)     token rows
+  order   (U,)       unit index -> token index, sorted by destination bin
+  starts  (bins,)    first position of each bin within `order`
+  counts  (bins,)    true demand per bin (may exceed capacity)
+
+Output: (bins, capacity, d); rows beyond a bin's count are zero.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def blob_pack_ref(x: jax.Array, order: jax.Array, starts: jax.Array,
+                  counts: jax.Array, *, capacity: int) -> jax.Array:
+    bins = starts.shape[0]
+    d = x.shape[-1]
+    r = jnp.arange(capacity)
+    # unit position in sorted order for (bin b, row r): starts[b] + r
+    pos = starts[:, None] + r[None, :]                      # (bins, cap)
+    valid = r[None, :] < jnp.minimum(counts, capacity)[:, None]
+    tok = order[jnp.clip(pos, 0, order.shape[0] - 1)]       # (bins, cap)
+    rows = x[tok]                                           # (bins, cap, d)
+    return jnp.where(valid[..., None], rows, 0).astype(x.dtype)

@@ -1,0 +1,54 @@
+"""Pallas TPU kernel for blob_unpack (Debatcher extract).
+
+Grid: (ceil(U / ROW_TILE),): each instance gathers ROW_TILE unit rows from
+the flattened blob buffer by dynamic slot index, zeroing dropped units.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ROW_TILE = 8
+
+
+def _make_kernel(U: int, row_tile: int):
+    def kernel(slot_ref, valid_ref, buf_ref, out_ref):
+        t = pl.program_id(0)
+        R = buf_ref.shape[0]
+
+        def body(i, _):
+            u = t * row_tile + i
+            uc = jnp.minimum(u, U - 1)
+            s = jnp.clip(slot_ref[uc], 0, R - 1)
+            row = buf_ref[s, :]
+            keep = (u < U) & valid_ref[uc]
+            out_ref[i, :] = jnp.where(keep, row, jnp.zeros_like(row))
+            return 0
+
+        jax.lax.fori_loop(0, row_tile, body, 0)
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def blob_unpack_pallas(buf, slot, valid, *, interpret: bool = True):
+    bins, cap, d = buf.shape
+    U = slot.shape[0]
+    flat = buf.reshape(bins * cap, d)
+    row_tile = min(ROW_TILE, U)
+    grid = (-(-U // row_tile),)
+    return pl.pallas_call(
+        _make_kernel(U, row_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(slot.shape, lambda t: (0,)),
+            pl.BlockSpec(valid.shape, lambda t: (0,)),
+            pl.BlockSpec(flat.shape, lambda t: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, d), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((U, d), buf.dtype),
+        interpret=interpret,
+    )(slot, valid, flat)

@@ -1,0 +1,24 @@
+"""Public op: blob_unpack — jitted wrapper (Pallas on TPU, oracle on CPU)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.blob_unpack.kernel import blob_unpack_pallas
+from repro.kernels.blob_unpack.ref import blob_unpack_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def blob_unpack(buf, slot, valid, *, use_pallas: bool = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return blob_unpack_pallas(buf, slot, valid,
+                                  interpret=not _on_tpu())
+    return blob_unpack_ref(buf, slot, valid)

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle for blob_unpack (Debatcher): bin layout -> unit rows."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def blob_unpack_ref(buf: jax.Array, slot: jax.Array, valid: jax.Array
+                    ) -> jax.Array:
+    """buf (bins, cap, d); slot (U,) flat slot ids; valid (U,) mask.
+
+    Returns (U, d): unit u reads buf.reshape(-1, d)[slot[u]], zero if
+    invalid (capacity-dropped units).
+    """
+    flat = buf.reshape(-1, buf.shape[-1])
+    rows = flat[jnp.clip(slot, 0, flat.shape[0] - 1)]
+    return jnp.where(valid[:, None], rows, 0).astype(buf.dtype)

@@ -1,0 +1,106 @@
+"""Pallas TPU flash-attention forward kernel.
+
+Grid: (B, H, nq). Per instance: the q block (Qt × D) lives in VMEM; the
+kv stream for the matching GQA kv-head is scanned in KV_TILE chunks with
+running (m, l, acc) — the MXU sees (Qt×D)·(D×KVt) and (Qt×KVt)·(KVt×D)
+matmuls; tiles are multiples of 128 on the contracted dims for
+hardware alignment. O(Qt·KVt) VMEM, never O(S²).
+
+Oracle: repro.kernels.flash_attention.ref (dense attention); also matched
+against the custom-VJP jnp flash in repro.models.flash by the tests.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _make_kernel(Sq: int, Skv: int, q_tile: int, kv_tile: int,
+                 causal: bool, scale: float):
+    nkv = -(-Skv // kv_tile)
+
+    def kernel(q_ref, k_ref, v_ref, o_ref):
+        t = pl.program_id(2)
+        q = q_ref[0, 0].astype(jnp.float32) * scale      # (Qt, D)
+        qpos = t * q_tile + jax.lax.iota(jnp.int32, q_tile)
+
+        def step(ki, carry):
+            acc, m, l = carry
+            k = k_ref[0, 0, pl.dslice(ki * kv_tile, kv_tile), :].astype(
+                jnp.float32)                              # (KVt, D)
+            v = v_ref[0, 0, pl.dslice(ki * kv_tile, kv_tile), :].astype(
+                jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())))           # (Qt, KVt)
+            kpos = ki * kv_tile + jax.lax.iota(jnp.int32, kv_tile)
+            mask = kpos[None, :] < Skv
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[:, None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[:, None] + jax.lax.dot_general(
+                p, v, (((1,), (0,)), ((), ())))
+            return acc_new, m_new, l_new
+
+        D = q_ref.shape[-1]
+        acc0 = jnp.zeros((q_tile, D), jnp.float32)
+        m0 = jnp.full((q_tile,), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((q_tile,), jnp.float32)
+        acc, m, l = jax.lax.fori_loop(0, nkv, step, (acc0, m0, l0))
+        o_ref[0, 0] = (acc / jnp.maximum(l[:, None], 1e-30)).astype(
+            o_ref.dtype)
+
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "q_tile", "kv_tile",
+                                             "interpret"))
+def flash_attention_pallas(q, k, v, *, causal: bool = True,
+                           q_tile: int = 128, kv_tile: int = 128,
+                           interpret: bool = True):
+    """q (B,Sq,H,D); k,v (B,Skv,KVH,D) with H % KVH == 0."""
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    q_tile = min(q_tile, Sq)
+    kv_tile = min(kv_tile, Skv)
+    # pad sequences to tile multiples (dynamic slices must stay in bounds;
+    # the kernel masks kpos >= Skv so padded kv rows contribute nothing)
+    qpad = (-Sq) % q_tile
+    kpad = (-Skv) % kv_tile
+    if qpad:
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    if kpad:
+        k = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    Sq_p, Skv_p = q.shape[1], k.shape[1]
+    # (B, H, S, D) layout for head-major blocking
+    qt = jnp.moveaxis(q, 2, 1)
+    kt = jnp.moveaxis(k, 2, 1)
+    vt = jnp.moveaxis(v, 2, 1)
+    grid = (B, H, Sq_p // q_tile)
+    out = pl.pallas_call(
+        _make_kernel(Sq_p, Skv, q_tile, kv_tile, causal, scale),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_tile, D), lambda b, h, t: (b, h, t, 0)),
+            pl.BlockSpec((1, 1, Skv_p, D), lambda b, h, t: (b, h // G, 0, 0)),
+            pl.BlockSpec((1, 1, Skv_p, D), lambda b, h, t: (b, h // G, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_tile, D),
+                               lambda b, h, t: (b, h, t, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq_p, D), q.dtype),
+        interpret=interpret,
+    )(qt, kt, vt)
+    return jnp.moveaxis(out, 1, 2)[:, :Sq]

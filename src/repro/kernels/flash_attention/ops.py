@@ -1,0 +1,25 @@
+"""Public op: flash attention — Pallas on TPU, custom-VJP jnp elsewhere."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.flash_attention.kernel import flash_attention_pallas
+from repro.models.flash import flash_attention as flash_jnp
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "use_pallas"))
+def flash_attention_op(q, k, v, *, causal: bool = True,
+                       use_pallas: bool = None):
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return flash_attention_pallas(q, k, v, causal=causal,
+                                      interpret=not _on_tpu())
+    return flash_jnp(q, k, v, causal=causal)

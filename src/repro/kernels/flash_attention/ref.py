@@ -1,0 +1,8 @@
+"""Oracle for the Pallas flash kernel: the dense reference attention."""
+
+from repro.models.attention import dense_attention
+
+
+def flash_ref(q, k, v, *, causal: bool = True):
+    """q (B,Sq,H,D); k,v (B,Skv,KVH,D) -> (B,Sq,H,D)."""
+    return dense_attention(q, k, v, causal=causal)

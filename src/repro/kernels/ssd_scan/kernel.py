@@ -1,0 +1,78 @@
+"""Pallas TPU kernel for the SSD per-chunk computation (Mamba2).
+
+Grid: (b, nc, H). Per instance the full Q×Q decay/score tile for one head
+lives in VMEM (Q ≤ 256 → ≤ 256 KiB fp32) and the two contractions
+(scores·x and the state outer product) hit the MXU. This is the tiling
+that replaces the 8-tensor quadratic materialization of the jnp path
+(observed 8.8 GB/layer on mamba2-130m train — see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(A_ref, x_ref, dt_ref, B_ref, C_ref, y_ref, st_ref, at_ref,
+            yd_ref):
+    h = pl.program_id(2)
+    x = x_ref[0, 0, :, 0, :].astype(jnp.float32)       # (Q, P)
+    dt = dt_ref[0, 0, :, 0].astype(jnp.float32)        # (Q,)
+    Bm = B_ref[0, 0, :, 0, :].astype(jnp.float32)      # (Q, N)
+    Cm = C_ref[0, 0, :, 0, :].astype(jnp.float32)      # (Q, N)
+    A = A_ref[h]
+    Q = x.shape[0]
+
+    a = dt * A
+    cum_a = jnp.cumsum(a)
+    a_total = cum_a[-1]
+    diff = cum_a[:, None] - cum_a[None, :]
+    ii = jax.lax.iota(jnp.int32, Q)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal, jnp.exp(diff), 0.0)       # (Q, Q)
+    scores = jax.lax.dot_general(
+        Cm, Bm, (((1,), (1,)), ((), ()))) * decay * dt[None, :]
+    y = jax.lax.dot_general(scores, x, (((1,), (0,)), ((), ())))
+    w = jnp.exp(a_total - cum_a) * dt                   # (Q,)
+    state = jax.lax.dot_general(
+        x * w[:, None], Bm, (((0,), (0,)), ((), ())))   # (P, N)
+
+    y_ref[0, 0, :, 0, :] = y.astype(y_ref.dtype)
+    st_ref[0, 0, 0] = state.astype(st_ref.dtype)
+    at_ref[0, 0, 0] = a_total
+    yd_ref[0, 0, :, 0] = jnp.exp(cum_a)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_chunk_pallas(xq, dtq, A, Bq, Cq, *, interpret: bool = True):
+    """Same contract as ssd_chunk_ref, with B/C pre-expanded to H heads."""
+    b, nc, Q, H, P = xq.shape
+    N = Bq.shape[-1]
+    grid = (b, nc, H)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(A.shape, lambda i, c, h: (0,)),
+            pl.BlockSpec((1, 1, Q, 1, P), lambda i, c, h: (i, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1), lambda i, c, h: (i, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda i, c, h: (i, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, 1, N), lambda i, c, h: (i, c, 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, 1, P), lambda i, c, h: (i, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, 1, P, N), lambda i, c, h: (i, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, 1), lambda i, c, h: (i, c, h)),
+            pl.BlockSpec((1, 1, Q, 1), lambda i, c, h: (i, c, 0, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, nc, Q, H, P), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, H, P, N), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, H), jnp.float32),
+            jax.ShapeDtypeStruct((b, nc, Q, H), jnp.float32),
+        ],
+        interpret=interpret,
+    )(A, xq, dtq, Bq, Cq)

@@ -1,0 +1,63 @@
+"""Public op: full chunked SSD built on the per-chunk kernel + host scan."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_chunk_pallas
+from repro.kernels.ssd_scan.ref import ssd_chunk_ref
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "use_pallas"))
+def ssd_scan_op(x, dt, A, B, C, *, chunk: int = 256, use_pallas=None):
+    """Chunked SSD: kernel for per-chunk terms + tiny inter-chunk scan.
+
+    Same contract as repro.models.ssm.ssd_chunked (y, final_state).
+    """
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    xq = x.reshape(b, nc, chunk, H, P)
+    dtq = dt.reshape(b, nc, chunk, H)
+    Bq = jnp.repeat(B.reshape(b, nc, chunk, G, N), rep, axis=3)
+    Cq = jnp.repeat(C.reshape(b, nc, chunk, G, N), rep, axis=3)
+
+    if use_pallas:
+        y_intra, states, a_total, y_decay = ssd_chunk_pallas(
+            xq, dtq, A.astype(jnp.float32), Bq, Cq,
+            interpret=not _on_tpu())
+    else:
+        y_intra, states, a_total, y_decay = ssd_chunk_ref(
+            xq, dtq, A.astype(jnp.float32), Bq, Cq)
+
+    def chunk_step(state, inp):
+        st_k, atot_k = inp
+        prev = state
+        return state * jnp.exp(atot_k)[..., None, None] + st_k, prev
+
+    state0 = jnp.zeros((b, H, P, N), jnp.float32)
+    final_state, prev = jax.lax.scan(
+        chunk_step, state0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(a_total, 1, 0)))
+    prev = jnp.moveaxis(prev, 0, 1)                     # (b, nc, H, P, N)
+    y_inter = jnp.einsum("bcih,bcihn,bchpn->bcihp", y_decay,
+                         Cq.astype(jnp.float32), prev)
+    y = (y_intra + y_inter).reshape(b, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state

@@ -1,0 +1,41 @@
+"""Oracle for the ssd_scan kernel: per-chunk SSD terms in pure jnp.
+
+The kernel computes, per (batch, chunk, head):
+  y_intra       — within-chunk quadratic contribution,
+  chunk_state   — end-of-chunk state contribution (pre-recurrence),
+  a_total       — per-head total decay of the chunk,
+  y_decay       — exp(cum_a) factors so the host can add the inter-chunk
+                  term  y_inter[i] = y_decay[i] · C[i] · S_prev.
+The tiny inter-chunk recurrence runs outside (jnp scan over states).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_chunk_ref(xq, dtq, A, Bq, Cq):
+    """xq (b,nc,Q,H,P); dtq (b,nc,Q,H); A (H,); Bq/Cq (b,nc,Q,H,N).
+
+    Returns (y_intra (b,nc,Q,H,P), states (b,nc,H,P,N),
+             a_total (b,nc,H), y_decay (b,nc,Q,H)).
+    """
+    xq = xq.astype(jnp.float32)
+    dtq = dtq.astype(jnp.float32)
+    Bq = Bq.astype(jnp.float32)
+    Cq = Cq.astype(jnp.float32)
+    Q = xq.shape[2]
+    a = dtq * A[None, None, None, :]
+    cum_a = jnp.cumsum(a, axis=2)
+    a_total = cum_a[:, :, -1]
+    diff = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]
+    ii = jnp.arange(Q)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(diff), 0.0)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cq, Bq) * decay \
+        * dtq[:, :, None, :, :]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xq)
+    w = jnp.exp(a_total[:, :, None, :] - cum_a) * dtq
+    states = jnp.einsum("bcjh,bcjhp,bcjhn->bchpn", w, xq, Bq)
+    return y_intra, states, a_total, jnp.exp(cum_a)

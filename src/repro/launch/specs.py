@@ -1,0 +1,38 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(cfg, shape)`` returns an ArraySpec tree for the step inputs;
+``abstract()`` / sharding rules are applied by the dry-run and launchers.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax.numpy as jnp
+
+from repro.models.common import ArraySpec, ModelConfig, ShapeConfig
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, ArraySpec]:
+    B, S = shape.global_batch, shape.seq_len
+
+    if shape.step == "decode":
+        return {"tokens": ArraySpec((B, 1), jnp.int32, ("batch", None)),
+                "pos": ArraySpec((), jnp.int32, ())}
+
+    specs: Dict[str, ArraySpec] = {}
+    mm = cfg.multimodal
+    if mm is not None and mm.kind == "audio":
+        specs["frames"] = ArraySpec((B, S, cfg.d_model), jnp.bfloat16,
+                                    ("batch", "seq", None))
+    elif mm is not None and mm.kind == "vision":
+        P = mm.num_patches
+        specs["tokens"] = ArraySpec((B, S - P), jnp.int32, ("batch", "seq"))
+        specs["patches"] = ArraySpec((B, P, cfg.d_model), jnp.bfloat16,
+                                     ("batch", "seq", None))
+    else:
+        specs["tokens"] = ArraySpec((B, S), jnp.int32, ("batch", "seq"))
+
+    if shape.step == "train":
+        specs["labels"] = ArraySpec((B, S), jnp.int32, ("batch", "seq"))
+    return specs

@@ -1,0 +1,4 @@
+from repro.models.common import (ArraySpec, ModelConfig, MoEConfig,
+                                 SSMConfig, MLAConfig, HybridConfig,
+                                 MultimodalConfig, ShapeConfig,
+                                 abstract_params, init_params)

@@ -1,0 +1,227 @@
+"""Attention: dense reference, chunked flash (jnp), GQA/MQA, decode path.
+
+The chunked ("flash-style") implementation is the mathematical oracle for the
+Pallas flash kernel in ``repro.kernels.flash_attention`` and the path that the
+multi-pod dry-run lowers (Pallas does not lower on the CPU backend). It is
+O(q_chunk·kv_chunk) in memory, which makes the 32k-prefill cells compilable.
+"""
+
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArraySpec, ModelConfig
+from repro.models.flash import ShardHints, NO_HINTS, flash_attention
+from repro.models.rope import apply_rope
+
+NEG_INF = -1e30
+
+
+def _gqa_expand(k: jax.Array, groups: int) -> jax.Array:
+    """(B, S, KVH, D) -> (B, S, KVH*groups, D) by repeat."""
+    if groups == 1:
+        return k
+    return jnp.repeat(k, groups, axis=2)
+
+
+def dense_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, q_offset=0,
+                    kv_len: Optional[jax.Array] = None) -> jax.Array:
+    """Reference attention.
+
+    q: (B, Sq, H, D);  k, v: (B, Skv, KVH, D) with H % KVH == 0.
+    ``q_offset``: position of q[0] relative to k[0] (decode: cur position).
+    ``kv_len``: optional valid kv length (masks positions >= kv_len).
+    """
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    # grouped-query einsum — never materializes the GQA-expanded cache
+    # (jnp.repeat on the stacked decode cache costs G× cache bytes and is
+    # hoisted out of the layer scan — see EXPERIMENTS.md §Perf); f32
+    # accumulation without f32 copies of cache-sized operands.
+    qg = q.reshape(B, Sq, KVH, G, D)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qg, k,
+                        preferred_element_type=jnp.float32) * scale
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        qpos = jnp.arange(Sq) + q_offset
+        mask = mask & (qpos[:, None] >= kpos[None, :])
+    if kv_len is not None:
+        mask = mask & (kpos[None, :] < kv_len)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def flash_attention_jnp(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True, q_chunk: int = 512,
+                        kv_chunk: int = 1024, q_offset: int = 0) -> jax.Array:
+    """Blocked attention with running softmax stats (flash algorithm).
+
+    Same signature/semantics as ``dense_attention`` (without kv_len).
+    Memory: O(q_chunk × kv_chunk) per program instead of O(Sq × Skv).
+    """
+    B, Sq, H, D = q.shape
+    Skv, KVH = k.shape[1], k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Skv)
+    # pad to multiples
+    sq_pad = (-Sq) % q_chunk
+    skv_pad = (-Skv) % kv_chunk
+    qp = jnp.pad(q, ((0, 0), (0, sq_pad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, skv_pad), (0, 0), (0, 0)))
+    nq, nkv = qp.shape[1] // q_chunk, kp.shape[1] // kv_chunk
+
+    kp = kp.reshape(B, nkv, kv_chunk, KVH, D)
+    vp = vp.reshape(B, nkv, kv_chunk, KVH, D)
+
+    def one_q_block(qi_and_block):
+        qi, qb = qi_and_block  # qb: (B, q_chunk, H, D)
+        qb32 = qb.astype(jnp.float32)
+        qpos = qi * q_chunk + jnp.arange(q_chunk) + q_offset
+
+        def kv_step(carry, inputs):
+            acc, m, l = carry
+            ki, kb, vb = inputs  # (B, kv_chunk, KVH, D)
+            kb = _gqa_expand(kb, G).astype(jnp.float32)
+            vb = _gqa_expand(vb, G).astype(jnp.float32)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb32, kb) * scale
+            kpos = ki * kv_chunk + jnp.arange(kv_chunk)
+            mask = kpos[None, :] < Skv  # mask kv padding
+            if causal:
+                mask = mask & (qpos[:, None] >= kpos[None, :])
+            s = jnp.where(mask[None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc_new = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p, vb)
+            return (acc_new, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, H, q_chunk, D), jnp.float32)
+        m0 = jnp.full((B, H, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, q_chunk), jnp.float32)
+        (acc, m, l), _ = jax.lax.scan(
+            kv_step, (acc0, m0, l0),
+            (jnp.arange(nkv), jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return jnp.moveaxis(out, 1, 2).astype(q.dtype)  # (B, q_chunk, H, D)
+
+    qblocks = jnp.moveaxis(
+        qp.reshape(B, nq, q_chunk, H, D), 1, 0)  # (nq, B, q_chunk, H, D)
+    outs = jax.lax.map(one_q_block, (jnp.arange(nq), qblocks))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, nq * q_chunk, H, D)
+    return out[:, :Sq]
+
+
+def attention_op(cfg: ModelConfig, q, k, v, *, causal, q_offset=0,
+                 kv_len=None, hints: ShardHints = NO_HINTS) -> jax.Array:
+    """Dispatch dense vs flash (custom-VJP) based on sequence length."""
+    Sq, Skv = q.shape[1], k.shape[1]
+    if kv_len is not None or max(Sq, Skv) <= cfg.flash_min_seq:
+        return dense_attention(q, k, v, causal=causal, q_offset=q_offset,
+                               kv_len=kv_len)
+    return flash_attention(q, k, v, causal=causal,
+                           q_chunk=cfg.flash_q_chunk,
+                           kv_chunk=cfg.flash_kv_chunk, q_offset=q_offset,
+                           hints=hints)
+
+
+# ---------------------------------------------------------------------------
+# Standard (GQA / MQA / MHA) attention layer
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg: ModelConfig, *, stacked: int = 0) -> dict:
+    d, H, KVH, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, \
+        cfg.resolved_head_dim
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    pd = cfg.param_dtype
+    out = {
+        "wq": ArraySpec(L + (d, H, hd), pd, la + ("embed", "heads", None)),
+        # kv projections carry their own d-axis name: at decode they must
+        # be REPLICATED over "model" so k_new/v_new are not partial sums —
+        # GSPMD otherwise defers the psum through the cache update,
+        # all-reducing the whole stacked cache (EXPERIMENTS.md §Perf D1/D4)
+        "wk": ArraySpec(L + (d, KVH, hd), pd,
+                        la + ("kv_embed", "kv_heads", None)),
+        "wv": ArraySpec(L + (d, KVH, hd), pd,
+                        la + ("kv_embed", "kv_heads", None)),
+        "wo": ArraySpec(L + (H, hd, d), pd, la + ("heads", None, "embed")),
+    }
+    if cfg.qkv_bias:
+        out["bq"] = ArraySpec(L + (H, hd), pd, la + ("heads", None), init="zeros")
+        out["bk"] = ArraySpec(L + (KVH, hd), pd, la + ("kv_heads", None), init="zeros")
+        out["bv"] = ArraySpec(L + (KVH, hd), pd, la + ("kv_heads", None), init="zeros")
+    return out
+
+
+def attention_qkv(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    """Project to q, k, v and apply RoPE. x: (B, S, d)."""
+    cd = cfg.compute_dtype
+    x = x.astype(cd)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(cd))
+    k = jnp.einsum("bsd,dhe->bshe", x, p["wk"].astype(cd))
+    v = jnp.einsum("bsd,dhe->bshe", x, p["wv"].astype(cd))
+    if cfg.qkv_bias:
+        q = q + p["bq"].astype(cd)
+        k = k + p["bk"].astype(cd)
+        v = v + p["bv"].astype(cd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+                    positions: jax.Array, causal: Optional[bool] = None,
+                    hints: ShardHints = NO_HINTS) -> jax.Array:
+    """Full-sequence attention (train / prefill). x: (B, S, d)."""
+    causal = cfg.causal if causal is None else causal
+    q, k, v = attention_qkv(cfg, p, x, positions)
+    out = attention_op(cfg, q, k, v, causal=causal, hints=hints)
+    return jnp.einsum("bshe,hed->bsd", out.astype(cfg.compute_dtype),
+                      p["wo"].astype(cfg.compute_dtype))
+
+
+def attention_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                     pos: jax.Array):
+    """One-token decode. x: (B, 1, d); cache: {"k","v"}: (B, S, KVH, hd).
+
+    ``pos``: scalar int32 — current position (number of tokens already in
+    the cache). Returns (out (B, 1, d), new_cache).
+    """
+    q, k_new, v_new = attention_qkv(cfg, p, x, positions=pos[None])
+    k_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k"], k_new.astype(cache["k"].dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["v"], v_new.astype(cache["v"].dtype), pos, axis=1)
+    out = dense_attention(q, k_cache, v_cache, causal=False,
+                          kv_len=pos + 1)
+    y = jnp.einsum("bshe,hed->bsd", out.astype(cfg.compute_dtype),
+                   p["wo"].astype(cfg.compute_dtype))
+    return y, {"k": k_cache, "v": v_cache}
+
+
+def attention_cache_defs(cfg: ModelConfig, batch: int, max_seq: int,
+                         *, stacked: int = 0) -> dict:
+    KVH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    spec = ArraySpec(L + (batch, max_seq, KVH, hd), cfg.compute_dtype,
+                     la + ("batch", "kv_seq", "kv_heads", None), init="zeros")
+    return {"k": spec, "v": spec}

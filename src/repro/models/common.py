@@ -1,0 +1,279 @@
+"""Model configuration and parameter-definition infrastructure.
+
+Every model in the zoo is described by a ``ModelConfig`` and exposes its
+parameters via a tree of ``ArraySpec`` — the single source of truth for
+shape, dtype, *and* logical sharding axes. From that one tree we derive:
+
+  * abstract parameters (``jax.ShapeDtypeStruct``) for the dry-run,
+  * real initialized parameters for smoke tests / examples,
+  * ``NamedSharding`` trees via the rules in ``repro.distributed.sharding``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+
+# ---------------------------------------------------------------------------
+# ArraySpec: shape + dtype + logical axes + init scheme
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ArraySpec:
+    """Declarative spec of one parameter / state array.
+
+    ``axes`` has one *logical* axis name (or None) per dimension. Logical
+    names are mapped to mesh axes by sharding rules (see distributed/).
+    """
+
+    shape: tuple
+    dtype: Any = jnp.float32
+    axes: tuple = ()
+    init: str = "normal"     # normal | zeros | ones | embed | small
+    init_scale: float = 1.0  # multiplier on top of the fan-in scaling
+
+    def __post_init__(self):
+        if self.axes and len(self.axes) != len(self.shape):
+            raise ValueError(
+                f"axes {self.axes} rank != shape {self.shape} rank")
+
+    @property
+    def size(self) -> int:
+        return math.prod(self.shape)
+
+    def abstract(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, self.dtype)
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        # fan-in scaled normal. For stacked-layer params the leading "layers"
+        # (or "experts") axis is excluded from fan-in.
+        fan_dims = [
+            d for d, a in zip(self.shape, self.axes or (None,) * len(self.shape))
+            if a not in ("layers", "experts", "stack")
+        ]
+        fan_in = fan_dims[0] if fan_dims else 1
+        if self.init == "embed":
+            scale = 1.0
+        elif self.init == "small":
+            scale = 0.02
+        else:
+            scale = 1.0 / math.sqrt(max(fan_in, 1))
+        scale *= self.init_scale
+        x = jax.random.normal(key, self.shape, jnp.float32) * scale
+        return x.astype(self.dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ArraySpec)
+
+
+def abstract_params(defs: PyTree) -> PyTree:
+    return jax.tree.map(lambda s: s.abstract(), defs, is_leaf=is_spec)
+
+
+def init_params(defs: PyTree, key: jax.Array) -> PyTree:
+    leaves, treedef = jax.tree.flatten(defs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    vals = [s.materialize(k) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, vals)
+
+
+def spec_axes(defs: PyTree) -> PyTree:
+    """Parallel tree of logical-axis tuples."""
+    return jax.tree.map(lambda s: s.axes, defs, is_leaf=is_spec)
+
+
+# ---------------------------------------------------------------------------
+# Sub-configs
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int            # routed experts
+    top_k: int
+    d_expert: int               # per-expert FFN hidden size
+    num_shared: int = 0         # always-on shared experts (same d_expert)
+    first_dense_layers: int = 0  # leading layers that use a dense FFN instead
+    dense_d_ff: int = 0          # hidden size of those dense layers
+    router_noise: float = 0.0
+    aux_loss_coef: float = 0.001
+    # token capacity factor for dense-dispatch mode (einsum); sort-based
+    # dispatch (shuffle modes) is capacity-free thanks to the notification
+    # metadata pre-exchange.
+    capacity_factor: float = 1.25
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    d_conv: int = 4
+    expand: int = 2
+    headdim: int = 64
+    ngroups: int = 1
+    chunk: int = 256
+    intra_bf16: bool = False  # quadratic intra-chunk tensors in bf16
+
+    def d_inner(self, d_model: int) -> int:
+        return self.expand * d_model
+
+    def nheads(self, d_model: int) -> int:
+        return self.d_inner(d_model) // self.headdim
+
+
+@dataclasses.dataclass(frozen=True)
+class MLAConfig:
+    kv_lora_rank: int = 512
+    q_lora_rank: int = 0          # 0 = no query compression (v2-lite)
+    qk_nope_head_dim: int = 128
+    qk_rope_head_dim: int = 64
+    v_head_dim: int = 128
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    """Zamba2-style: Mamba2 backbone with a shared attention block."""
+    shared_block_every: int = 6   # one shared-block call per this many layers
+    # the shared block consumes concat(h, h_embed) -> proj to d_model
+    concat_embed: bool = True
+
+
+@dataclasses.dataclass(frozen=True)
+class MultimodalConfig:
+    """Stub modality frontend: input_specs provide precomputed embeddings."""
+    kind: str = "vision"          # vision | audio
+    num_patches: int = 2880       # patches (vision) per example
+    frontend_dim: int = 0         # 0 => already projected to d_model
+
+
+# ---------------------------------------------------------------------------
+# ModelConfig
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    kind: str                      # decoder | encoder | ssm | hybrid
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 => d_model // num_heads
+    mlp: str = "swiglu"            # swiglu | geglu | gelu
+    qkv_bias: bool = False
+    rope_theta: float = 10000.0
+    norm_eps: float = 1e-6
+    tie_embeddings: bool = False
+    embed_scale: bool = False      # gemma: scale embeddings by sqrt(d)
+    causal: bool = True
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    mla: Optional[MLAConfig] = None
+    hybrid: Optional[HybridConfig] = None
+    multimodal: Optional[MultimodalConfig] = None
+    # numerics
+    param_dtype: Any = jnp.float32
+    compute_dtype: Any = jnp.bfloat16
+    # attention implementation thresholds
+    flash_q_chunk: int = 512
+    flash_kv_chunk: int = 1024
+    flash_min_seq: int = 2048      # below this use dense reference attention
+    # comments / provenance
+    source: str = ""
+
+    @property
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    @property
+    def attn_free(self) -> bool:
+        return self.kind == "ssm"
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """Supports the long_500k decode shape (SSM / hybrid)."""
+        return self.kind in ("ssm", "hybrid")
+
+    @property
+    def has_decode(self) -> bool:
+        return self.kind != "encoder"
+
+    def param_count(self) -> int:
+        """Approximate parameter count (exact count comes from the defs)."""
+        from repro.models import lm  # local import to avoid cycle
+        return sum(s.size for s in jax.tree.leaves(
+            lm.param_defs(self), is_leaf=is_spec) if is_spec(s))
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: shared + top_k routed only)."""
+        total = self.param_count()
+        if self.moe is None:
+            return total
+        m = self.moe
+        moe_layers = self.num_layers - m.first_dense_layers
+        per_expert = 3 * self.d_model * m.d_expert
+        inactive = moe_layers * (m.num_experts - m.top_k) * per_expert
+        return total - inactive
+
+
+# ---------------------------------------------------------------------------
+# Shape presets (the four assigned input-shape cells)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ShapeConfig:
+    name: str
+    seq_len: int
+    global_batch: int
+    step: str                      # train | prefill | decode
+
+    @property
+    def is_decode(self) -> bool:
+        return self.step == "decode"
+
+
+TRAIN_4K = ShapeConfig("train_4k", 4096, 256, "train")
+PREFILL_32K = ShapeConfig("prefill_32k", 32768, 32, "prefill")
+DECODE_32K = ShapeConfig("decode_32k", 32768, 128, "decode")
+LONG_500K = ShapeConfig("long_500k", 524288, 1, "decode")
+
+ALL_SHAPES = (TRAIN_4K, PREFILL_32K, DECODE_32K, LONG_500K)
+
+
+def applicable_shapes(cfg: ModelConfig) -> list:
+    """Shape cells that apply to this architecture (see DESIGN.md §4)."""
+    out = []
+    for s in ALL_SHAPES:
+        if s.is_decode and not cfg.has_decode:
+            continue  # encoder-only: no decode step
+        if s.name == "long_500k" and not cfg.sub_quadratic:
+            continue  # needs sub-quadratic attention
+        out.append(s)
+    return out
+
+
+def skipped_shapes(cfg: ModelConfig) -> list:
+    names = {s.name for s in applicable_shapes(cfg)}
+    out = []
+    for s in ALL_SHAPES:
+        if s.name in names:
+            continue
+        if s.is_decode and not cfg.has_decode:
+            out.append((s.name, "encoder-only arch has no decode step"))
+        else:
+            out.append((s.name, "pure full-attention arch; long_500k needs "
+                                "sub-quadratic attention"))
+    return out

@@ -1,0 +1,155 @@
+"""Multi-head Latent Attention (DeepSeek-V2) with compressed KV cache.
+
+Two decode paths:
+  * ``absorb=False`` (naive): expand k_nope/v from the cached latent each step.
+  * ``absorb=True``: absorb W_uk into the query and W_uv into the output —
+    attention runs directly in the 512-dim latent space. This is the
+    beyond-baseline optimized path (see EXPERIMENTS.md §Perf).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArraySpec, MLAConfig, ModelConfig
+from repro.models.layers import rms_norm
+from repro.models.rope import apply_rope
+from repro.models.attention import dense_attention, attention_op
+from repro.models.flash import ShardHints, NO_HINTS
+
+NEG_INF = -1e30
+
+
+def mla_defs(cfg: ModelConfig, *, stacked: int = 0) -> dict:
+    m = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    pd = cfg.param_dtype
+    return {
+        "wq": ArraySpec(L + (d, H, qk), pd, la + ("embed", "heads", None)),
+        "w_dkv": ArraySpec(L + (d, m.kv_lora_rank + m.qk_rope_head_dim), pd,
+                           la + ("embed", None)),
+        "kv_norm": ArraySpec(L + (m.kv_lora_rank,), jnp.float32,
+                             la + (None,), init="zeros"),
+        "w_uk": ArraySpec(L + (m.kv_lora_rank, H, m.qk_nope_head_dim), pd,
+                          la + (None, "heads", None)),
+        "w_uv": ArraySpec(L + (m.kv_lora_rank, H, m.v_head_dim), pd,
+                          la + (None, "heads", None)),
+        "wo": ArraySpec(L + (H, m.v_head_dim, d), pd,
+                        la + ("heads", None, "embed")),
+    }
+
+
+def _project(cfg: ModelConfig, p: dict, x: jax.Array, positions):
+    """Common projections. Returns (q_nope, q_rope, c_kv, k_rope)."""
+    m = cfg.mla
+    cd = cfg.compute_dtype
+    x = x.astype(cd)
+    q = jnp.einsum("bsd,dhe->bshe", x, p["wq"].astype(cd))
+    q_nope = q[..., :m.qk_nope_head_dim]
+    q_rope = apply_rope(q[..., m.qk_nope_head_dim:], positions, cfg.rope_theta)
+    dkv = x @ p["w_dkv"].astype(cd)
+    c_kv = rms_norm(dkv[..., :m.kv_lora_rank], p["kv_norm"], cfg.norm_eps)
+    k_rope = apply_rope(dkv[..., None, m.kv_lora_rank:], positions,
+                        cfg.rope_theta)  # (B, S, 1, rope_dim)
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def mla_apply(cfg: ModelConfig, p: dict, x: jax.Array, *,
+              positions: jax.Array, hints: ShardHints = NO_HINTS
+              ) -> jax.Array:
+    """Full-sequence MLA (train / prefill) via expanded keys/values."""
+    m = cfg.mla
+    cd = cfg.compute_dtype
+    q_nope, q_rope, c_kv, k_rope = _project(cfg, p, x, positions)
+    k_nope = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uk"].astype(cd))
+    v = jnp.einsum("bsr,rhe->bshe", c_kv, p["w_uv"].astype(cd))
+    H = cfg.num_heads
+    k_rope_b = jnp.broadcast_to(
+        k_rope, k_rope.shape[:2] + (H, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    # v head dim may differ from qk dim; attention_op handles D from q/k only
+    out = attention_op(cfg, q, k, _pad_v(v, q.shape[-1]), causal=cfg.causal,
+                       hints=hints)
+    out = out[..., :m.v_head_dim]
+    return jnp.einsum("bshe,hed->bsd", out.astype(cd), p["wo"].astype(cd))
+
+
+def _pad_v(v: jax.Array, d: int) -> jax.Array:
+    """Pad value head-dim up to the qk head-dim (sliced off after)."""
+    if v.shape[-1] == d:
+        return v
+    return jnp.pad(v, ((0, 0),) * (v.ndim - 1) + ((0, d - v.shape[-1]),))
+
+
+def mla_cache_defs(cfg: ModelConfig, batch: int, max_seq: int,
+                   *, stacked: int = 0) -> dict:
+    m = cfg.mla
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    return {
+        "c_kv": ArraySpec(L + (batch, max_seq, m.kv_lora_rank),
+                          cfg.compute_dtype, la + ("batch", "kv_seq", None),
+                          init="zeros"),
+        "k_rope": ArraySpec(L + (batch, max_seq, m.qk_rope_head_dim),
+                            cfg.compute_dtype, la + ("batch", "kv_seq", None),
+                            init="zeros"),
+    }
+
+
+def mla_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+               pos: jax.Array, *, absorb: bool = False):
+    """One-token MLA decode against the compressed latent cache."""
+    m = cfg.mla
+    cd = cfg.compute_dtype
+    H = cfg.num_heads
+    q_nope, q_rope, c_new, k_rope_new = _project(cfg, p, x, positions=pos[None])
+    c_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), pos, axis=1)
+    kr_cache = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], k_rope_new[:, :, 0].astype(cache["k_rope"].dtype),
+        pos, axis=1)
+    new_cache = {"c_kv": c_cache, "k_rope": kr_cache}
+    S = c_cache.shape[1]
+    kpos = jnp.arange(S)
+    valid = kpos < (pos + 1)
+    scale = 1.0 / math.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+
+    if absorb:
+        # scores = (q_nope W_uk) · c_kv + q_rope · k_rope — all cache-sized
+        # contractions accumulate in f32 without casting the cache
+        q_abs = jnp.einsum("bqhe,rhe->bqhr", q_nope.astype(cd),
+                           p["w_uk"].astype(cd))
+        s_nope = jnp.einsum("bqhr,bsr->bhqs", q_abs, c_cache,
+                            preferred_element_type=jnp.float32)
+        s_rope = jnp.einsum("bqhe,bse->bhqs", q_rope.astype(cd), kr_cache,
+                            preferred_element_type=jnp.float32)
+        s = (s_nope + s_rope) * scale
+        s = jnp.where(valid[None, None, None], s, NEG_INF)
+        probs = jax.nn.softmax(s, axis=-1).astype(cd)
+        ctx = jnp.einsum("bhqs,bsr->bqhr", probs, c_cache,
+                         preferred_element_type=jnp.float32)
+        out = jnp.einsum("bqhr,rhe->bqhe", ctx.astype(cd),
+                         p["w_uv"].astype(cd),
+                         preferred_element_type=jnp.float32)
+    else:
+        k_nope = jnp.einsum("bsr,rhe->bshe", c_cache.astype(cd),
+                            p["w_uk"].astype(cd))
+        v = jnp.einsum("bsr,rhe->bshe", c_cache.astype(cd),
+                       p["w_uv"].astype(cd))
+        k_rope_b = jnp.broadcast_to(
+            kr_cache[:, :, None, :].astype(cd),
+            (x.shape[0], S, H, m.qk_rope_head_dim))
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+        out = dense_attention(q, k, _pad_v(v, q.shape[-1]), causal=False,
+                              kv_len=pos + 1)[..., :m.v_head_dim]
+    y = jnp.einsum("bshe,hed->bsd", out.astype(cd), p["wo"].astype(cd))
+    return y, new_cache

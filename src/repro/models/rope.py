@@ -1,0 +1,35 @@
+"""Rotary position embeddings (llama-style rotate-half convention)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (head_dim//2,), float32."""
+    exponents = jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim
+    return 1.0 / (theta ** exponents)
+
+
+def rope_cos_sin(positions: jax.Array, head_dim: int, theta: float):
+    """cos/sin tables for integer positions (…,) -> (…, head_dim//2)."""
+    inv = rope_freqs(head_dim, theta)
+    angles = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(angles), jnp.sin(angles)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE.
+
+    x: (..., seq, heads, head_dim); positions: broadcastable to (..., seq).
+    Uses the rotate-half convention: pairs are (x[: d/2], x[d/2 :]).
+    """
+    head_dim = x.shape[-1]
+    cos, sin = rope_cos_sin(positions, head_dim, theta)  # (..., seq, d/2)
+    cos = cos[..., None, :]  # add heads axis
+    sin = sin[..., None, :]
+    x32 = x.astype(jnp.float32)
+    x1, x2 = jnp.split(x32, 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)

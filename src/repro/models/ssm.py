@@ -1,0 +1,272 @@
+"""Mamba2 (state-space duality / SSD) blocks.
+
+The chunked SSD algorithm is expressed as matmuls (MXU-friendly) with a
+`lax.scan` over chunk states — the TPU-native adaptation of the CUDA scan.
+``ssd_chunked`` is the jnp oracle for the Pallas kernel in
+``repro.kernels.ssd_scan``. ``ssd_reference`` is a step-by-step recurrence
+used only in tests.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ArraySpec, ModelConfig, SSMConfig
+from repro.models.layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# Core SSD math
+# ---------------------------------------------------------------------------
+
+def ssd_reference(x, dt, A, B, C, *, initial_state=None):
+    """Naive sequential recurrence (oracle).
+
+    x: (b, S, H, P); dt: (b, S, H); A: (H,); B, C: (b, S, G, N).
+    Returns (y (b, S, H, P), final_state (b, H, P, N)).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    x32, dt32 = x.astype(jnp.float32), dt.astype(jnp.float32)
+    dA = jnp.exp(dt32 * A[None, None, :])  # (b, S, H)
+
+    def step(state, inputs):
+        xt, dAt, dtt, Bt, Ct = inputs
+        state = state * dAt[..., None, None] + \
+            (dtt[..., None, None] * xt[..., None]) * Bt[:, :, None, :]
+        y = jnp.einsum("bhpn,bhn->bhp", state, Ct)
+        return state, y
+
+    state0 = (jnp.zeros((b, H, P, N), jnp.float32)
+              if initial_state is None else initial_state.astype(jnp.float32))
+    xs = (jnp.moveaxis(x32, 1, 0), jnp.moveaxis(dA, 1, 0),
+          jnp.moveaxis(dt32, 1, 0), jnp.moveaxis(Bh, 1, 0),
+          jnp.moveaxis(Ch, 1, 0))
+    state, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), state
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int = 256, initial_state=None,
+                intra_bf16: bool = False):
+    """Chunked SSD (matmul form). Same contract as ``ssd_reference``.
+
+    ``intra_bf16``: hold the O(S·chunk·H) quadratic intra-chunk tensors
+    (decay, scores) in bf16 with f32 accumulation — halves the dominant
+    HBM traffic of the jnp path (the Pallas ssd_scan kernel fuses these
+    entirely on real TPUs; see EXPERIMENTS.md §Perf).
+    """
+    b, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    Sp = x.shape[1]
+    nc = Sp // chunk
+    # reshape to (b, nc, Q, ...)
+    xq = x.reshape(b, nc, chunk, H, P).astype(jnp.float32)
+    dtq = dt.reshape(b, nc, chunk, H).astype(jnp.float32)
+    Bq = jnp.repeat(B.reshape(b, nc, chunk, G, N), rep, axis=3).astype(jnp.float32)
+    Cq = jnp.repeat(C.reshape(b, nc, chunk, G, N), rep, axis=3).astype(jnp.float32)
+
+    a = dtq * A[None, None, None, :]              # (b, nc, Q, H)
+    cum_a = jnp.cumsum(a, axis=2)                  # inclusive
+    a_total = cum_a[:, :, -1]                      # (b, nc, H)
+
+    # --- intra-chunk (quadratic in Q, matmul-friendly) ---
+    # decay[i, j] = exp(cum_a[i] - cum_a[j]) for i >= j
+    diff = cum_a[:, :, :, None, :] - cum_a[:, :, None, :, :]  # (b,nc,Q,Q,H)
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    it = jnp.bfloat16 if intra_bf16 else jnp.float32
+    decay = jnp.where(causal[None, None, :, :, None],
+                      jnp.exp(diff), 0.0).astype(it)
+    scores = jnp.einsum("bcihn,bcjhn->bcijh", Cq.astype(it), Bq.astype(it),
+                        preferred_element_type=it) * decay \
+        * dtq[:, :, None, :, :].astype(it)
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", scores, xq.astype(it),
+                         preferred_element_type=jnp.float32)
+
+    # --- end-of-chunk states ---
+    w = jnp.exp(a_total[:, :, None, :] - cum_a) * dtq  # (b, nc, Q, H)
+    chunk_states = jnp.einsum("bcjh,bcjhp,bcjhn->bchpn", w, xq, Bq)
+
+    # --- inter-chunk recurrence: associative (parallel-prefix) scan.
+    # state_k = e^{a_k}·state_{k-1} + S_k is a linear recurrence; the
+    # associative form runs in log2(nc) batched steps instead of nc
+    # sequential slices — fewer/larger fused ops (≈3× less HBM traffic on
+    # the jnp path, §Perf 3.3) and real parallelism on TPU.
+    state0 = (jnp.zeros((b, H, P, N), jnp.float32)
+              if initial_state is None else initial_state.astype(jnp.float32))
+    decays = jnp.exp(a_total)                       # (b, nc, H)
+    states_in = chunk_states.at[:, 0].add(
+        state0 * decays[:, 0, :, None, None])       # fold initial state in
+
+    def combine(x, y):
+        a1, s1 = x
+        a2, s2 = y
+        return a1 * a2, s1 * a2[..., None, None] + s2
+
+    _, states_after = jax.lax.associative_scan(
+        combine, (decays, states_in), axis=1)       # inclusive prefix
+    final_state = states_after[:, -1]
+    prev_states = jnp.concatenate(
+        [state0[:, None], states_after[:, :-1]], axis=1)  # (b,nc,H,P,N)
+
+    # --- contribution of the incoming state to each position ---
+    y_inter = jnp.einsum("bcih,bcihn,bchpn->bcihp",
+                         jnp.exp(cum_a), Cq, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, Sp, H, P)[:, :S]
+    return y.astype(x.dtype), final_state
+
+
+def ssd_decode_step(state, x, dt, A, B, C):
+    """Single-token SSD update.
+
+    state: (b, H, P, N); x: (b, H, P); dt: (b, H); B, C: (b, G, N).
+    Returns (y (b, H, P), new_state).
+    """
+    H = x.shape[1]
+    G = B.shape[1]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=1).astype(jnp.float32)
+    dt32 = dt.astype(jnp.float32)
+    dA = jnp.exp(dt32 * A[None, :])
+    state = state * dA[..., None, None] + \
+        (dt32[..., None, None] * x.astype(jnp.float32)[..., None]) \
+        * Bh[:, :, None, :]
+    y = jnp.einsum("bhpn,bhn->bhp", state, Ch)
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (in_proj → conv → SSD → gated norm → out_proj)
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.d_inner(cfg.d_model)
+    H = s.nheads(cfg.d_model)
+    conv_ch = d_inner + 2 * s.ngroups * s.d_state
+    d_in_proj = 2 * d_inner + 2 * s.ngroups * s.d_state + H
+    return s, d_inner, H, conv_ch, d_in_proj
+
+
+def mamba2_defs(cfg: ModelConfig, *, stacked: int = 0) -> dict:
+    s, d_inner, H, conv_ch, d_in_proj = _dims(cfg)
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    pd = cfg.param_dtype
+    return {
+        "in_proj": ArraySpec(L + (cfg.d_model, d_in_proj), pd,
+                             la + ("embed", "mlp")),
+        "conv_w": ArraySpec(L + (s.d_conv, conv_ch), pd,
+                            la + (None, "mlp"), init="small"),
+        "conv_b": ArraySpec(L + (conv_ch,), pd, la + ("mlp",), init="zeros"),
+        "A_log": ArraySpec(L + (H,), jnp.float32, la + ("heads",),
+                           init="zeros"),
+        "dt_bias": ArraySpec(L + (H,), jnp.float32, la + ("heads",),
+                             init="zeros"),
+        "D": ArraySpec(L + (H,), jnp.float32, la + ("heads",), init="ones"),
+        "norm": ArraySpec(L + (d_inner,), jnp.float32, la + ("mlp",),
+                          init="zeros"),
+        "out_proj": ArraySpec(L + (d_inner, cfg.d_model), pd,
+                              la + ("mlp", "embed")),
+    }
+
+
+def _split_in_proj(cfg: ModelConfig, zxbcdt: jax.Array):
+    s, d_inner, H, conv_ch, _ = _dims(cfg)
+    gn = s.ngroups * s.d_state
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner:d_inner + conv_ch]
+    dt = zxbcdt[..., d_inner + conv_ch:]
+    return z, xBC, dt, (s, d_inner, H, gn)
+
+
+def _causal_conv(xBC: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """Depthwise causal conv. xBC: (B, S, C); w: (K, C); b: (C,)."""
+    K = w.shape[0]
+    x = jnp.pad(xBC, ((0, 0), (K - 1, 0), (0, 0)))
+    # sum over K shifted copies — avoids conv primitives, trivially shardable.
+    out = jnp.zeros_like(xBC, dtype=jnp.float32)
+    for k in range(K):
+        out = out + x[:, k:k + xBC.shape[1]].astype(jnp.float32) * \
+            w[k].astype(jnp.float32)
+    return (out + b.astype(jnp.float32)).astype(xBC.dtype)
+
+
+def mamba2_apply(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """Full-sequence Mamba2 block. x: (B, S, d_model)."""
+    cd = cfg.compute_dtype
+    zxbcdt = x.astype(cd) @ p["in_proj"].astype(cd)
+    z, xBC, dt, (s, d_inner, H, gn) = _split_in_proj(cfg, zxbcdt)
+    xBC = jax.nn.silu(_causal_conv(xBC, p["conv_w"], p["conv_b"]))
+    xs = xBC[..., :d_inner]
+    Bm = xBC[..., d_inner:d_inner + gn]
+    Cm = xBC[..., d_inner + gn:]
+    b, S = x.shape[0], x.shape[1]
+    xs = xs.reshape(b, S, H, s.headdim)
+    Bm = Bm.reshape(b, S, s.ngroups, s.d_state)
+    Cm = Cm.reshape(b, S, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, _ = ssd_chunked(xs, dt, A, Bm, Cm, chunk=s.chunk,
+                       intra_bf16=s.intra_bf16)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(b, S, d_inner).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    return y @ p["out_proj"].astype(cd)
+
+
+def mamba2_cache_defs(cfg: ModelConfig, batch: int, *, stacked: int = 0
+                      ) -> dict:
+    s, d_inner, H, conv_ch, _ = _dims(cfg)
+    L = (stacked,) if stacked else ()
+    la = ("layers",) if stacked else ()
+    return {
+        "conv": ArraySpec(L + (batch, s.d_conv - 1, conv_ch),
+                          cfg.compute_dtype, la + ("batch", None, "mlp"),
+                          init="zeros"),
+        "state": ArraySpec(L + (batch, H, s.headdim, s.d_state),
+                           jnp.float32, la + ("batch", "heads", None, None),
+                           init="zeros"),
+    }
+
+
+def mamba2_decode(cfg: ModelConfig, p: dict, x: jax.Array, cache: dict,
+                  pos: jax.Array):
+    """Single-token Mamba2 step. x: (B, 1, d_model)."""
+    cd = cfg.compute_dtype
+    zxbcdt = x[:, 0].astype(cd) @ p["in_proj"].astype(cd)
+    z, xBC, dt, (s, d_inner, H, gn) = _split_in_proj(cfg, zxbcdt)
+    # conv over (cached history, current)
+    hist = cache["conv"]                                # (B, K-1, C)
+    window = jnp.concatenate([hist, xBC[:, None]], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", window.astype(jnp.float32),
+                          p["conv_w"].astype(jnp.float32)) + \
+        p["conv_b"].astype(jnp.float32)
+    xBC = jax.nn.silu(conv_out).astype(cd)
+    new_conv = window[:, 1:]
+    xs = xBC[..., :d_inner].reshape(-1, H, s.headdim)
+    Bm = xBC[..., d_inner:d_inner + gn].reshape(-1, s.ngroups, s.d_state)
+    Cm = xBC[..., d_inner + gn:].reshape(-1, s.ngroups, s.d_state)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_decode_step(cache["state"], xs, dt, A, Bm, Cm)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(-1, d_inner).astype(cd)
+    y = rms_norm(y * jax.nn.silu(z), p["norm"], cfg.norm_eps)
+    out = (y @ p["out_proj"].astype(cd))[:, None]
+    return out, {"conv": new_conv, "state": new_state}

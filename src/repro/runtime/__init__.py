@@ -1,0 +1,3 @@
+from repro.runtime.fault_tolerance import FaultTolerantTrainer
+from repro.runtime.stragglers import HedgedFetcher
+from repro.runtime.elastic import elastic_restore_plan

@@ -1,0 +1,2 @@
+from repro.serving.engine import (ServeConfig, make_prefill_step,
+                                  make_decode_step, greedy_sample)

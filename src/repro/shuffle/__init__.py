@@ -1,0 +1,10 @@
+"""TPU-native adaptation of BlobShuffle: hierarchical, blob-batched
+repartitioning collectives (see DESIGN.md §2).
+
+  * ``dispatch``  — per-device token dispatch/combine (flat vs blob modes)
+  * ``api``       — shard_map wrappers (the public entry points)
+  * ``grad_sync`` — blob-bucketed hierarchical cross-pod gradient reduction
+  * ``compression`` — int8 quantization with error feedback for the DCN leg
+"""
+
+from repro.shuffle.api import ep_moe_ffn, ShuffleConfig  # noqa: F401

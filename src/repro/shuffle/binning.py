@@ -1,0 +1,67 @@
+"""Token binning ("Batcher") primitives shared by all shuffle modes.
+
+``bin_pack`` is the tensor-level analogue of the paper's Batcher: units
+(token, expert-slot) are grouped by destination into fixed-capacity,
+contiguous bins — the "blobs". ``counts`` is the compact notification
+metadata (the analogue of the batch-id + byte-range references that flow
+through Kafka in the paper).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Packing(NamedTuple):
+    slot: jax.Array     # (U,) int32 — flat slot in the (bins*capacity) buffer
+    valid: jax.Array    # (U,) bool — False for capacity-overflow (dropped)
+    counts: jax.Array   # (bins,) int32 — notification metadata (true demand)
+
+
+def bin_pack(keys: jax.Array, num_bins: int, capacity: int) -> Packing:
+    """Assign each unit a slot = key*capacity + rank-within-key.
+
+    Ranks are assigned in stable sorted order, so records for a given
+    destination appear contiguously — matching the paper's blob layout
+    ("records for a given partition appear sequentially within the batch").
+    """
+    U = keys.shape[0]
+    order = jnp.argsort(keys, stable=True)
+    sorted_keys = keys[order]
+    counts = jnp.bincount(keys, length=num_bins)
+    starts = jnp.concatenate(
+        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(U, dtype=jnp.int32) - starts[sorted_keys].astype(
+        jnp.int32)
+    rank = jnp.zeros(U, jnp.int32).at[order].set(rank_sorted)
+    valid = rank < capacity
+    slot = keys.astype(jnp.int32) * capacity + jnp.minimum(rank, capacity - 1)
+    return Packing(slot, valid, counts.astype(jnp.int32))
+
+
+def scatter_to_bins(values: jax.Array, pack: Packing, num_bins: int,
+                    capacity: int) -> jax.Array:
+    """values: (U, ...) -> (num_bins, capacity, ...). Overflow units are
+    routed to a dump row that is sliced off (no collisions among valid)."""
+    total = num_bins * capacity
+    slot = jnp.where(pack.valid, pack.slot, total)
+    buf = jnp.zeros((total + 1,) + values.shape[1:], values.dtype)
+    buf = buf.at[slot].set(values, mode="drop")
+    return buf[:total].reshape((num_bins, capacity) + values.shape[1:])
+
+
+def gather_from_bins(buf: jax.Array, pack: Packing) -> jax.Array:
+    """Inverse of scatter: (num_bins, capacity, ...) -> (U, ...).
+    Invalid (dropped) units read zeros."""
+    flat = buf.reshape((-1,) + buf.shape[2:])
+    vals = flat[pack.slot]
+    mask = pack.valid.reshape((-1,) + (1,) * (vals.ndim - 1))
+    return jnp.where(mask, vals, 0)
+
+
+def dropped_units(pack: Packing, capacity: int) -> jax.Array:
+    """Overflow count derived from the notification metadata."""
+    return jnp.sum(jnp.maximum(pack.counts - capacity, 0))

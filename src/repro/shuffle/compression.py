@@ -1,0 +1,51 @@
+"""Quantized transfer for the expensive (inter-pod / DCN) leg.
+
+The paper pays the cheap tier (object storage) with bytes and the expensive
+tier (cross-AZ) with nothing; the TPU analogue compresses payloads before
+they cross the ``pod`` axis. Two users:
+
+  * blob MoE dispatch: int8 per-row quantization of the stage-2 blobs,
+  * gradient sync: int8 all-reduce with **error feedback** (the residual is
+    carried to the next step so compression noise does not bias training).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def int8_quantize(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization over the last axis.
+
+    Returns (q int8 same shape, scale float32 shape[:-1]).
+    """
+    x32 = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = jnp.where(absmax > 0, absmax / 127.0, 1.0)
+    q = jnp.clip(jnp.round(x32 / scale[..., None]), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array, dtype) -> jax.Array:
+    return (q.astype(jnp.float32) * scale[..., None]).astype(dtype)
+
+
+def compress_decompress(x: jax.Array) -> jax.Array:
+    """Round-trip (used to model the lossy channel in tests/benchmarks)."""
+    q, s = int8_quantize(x)
+    return int8_dequantize(q, s, x.dtype)
+
+
+def with_error_feedback(grad: jax.Array, residual: jax.Array
+                        ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize (grad + residual); return (dequantized payload, new residual).
+
+    new_residual = (grad + residual) - payload — carried to the next step.
+    """
+    target = grad.astype(jnp.float32) + residual.astype(jnp.float32)
+    payload = compress_decompress(target)
+    new_residual = target - payload.astype(jnp.float32)
+    return payload.astype(grad.dtype), new_residual.astype(residual.dtype)

@@ -1,0 +1,137 @@
+"""Blob-bucketed hierarchical cross-pod gradient synchronization.
+
+The BlobShuffle pattern applied to dense-model data parallelism: intra-pod
+reductions ride the cheap ICI (handled by GSPMD as usual), while the
+cross-pod ("cross-AZ") reduction is taken over manually and
+
+  * **bucketed** into ~``blob_bytes`` flat blobs (the ``S_batch`` knob —
+    amortizes per-collective latency/launch overhead exactly as batching
+    amortizes per-request S3 cost, and enables overlap),
+  * optionally **int8-compressed** on the DCN leg only (pay the expensive
+    tier in fewer bytes), with optional **error feedback** so compression
+    noise is carried, not accumulated.
+
+Exact algorithm per blob (P = number of pods):
+  reshape (P, n/P) → all_to_all over "pod" (each pod receives every pod's
+  copy of its shard) → dequantize+sum locally → re-quantize → all_gather.
+  DCN bytes: 2·(P−1)/P·n·itemsize  (itemsize 1 when compressed vs 4).
+
+These functions run inside a shard_map that is *manual* over the "pod"
+axis (see ``make_train_step``'s grad_sync modes).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.shuffle import compression
+
+PyTree = Any
+
+
+MAX_BLOBS = 32  # cap on emitted collectives (keeps HLO size bounded)
+
+
+def _flatten_to_blobs(tree: PyTree, blob_bytes: int):
+    """Concatenate all leaves (as f32) and split into ~blob_bytes blobs.
+
+    The blob count is capped at MAX_BLOBS: like the paper's Batcher, the
+    batch size is a *target* — very large gradients get proportionally
+    larger blobs rather than an unbounded number of collectives.
+    """
+    leaves, treedef = jax.tree.flatten(tree)
+    flat = jnp.concatenate([l.astype(jnp.float32).reshape(-1)
+                            for l in leaves])
+    n_per_blob = max(blob_bytes // 4, 1)
+    n_blobs = min(max(-(-flat.size // n_per_blob), 1), MAX_BLOBS)
+    n_per_blob = -(-flat.size // n_blobs)
+    pad = n_blobs * n_per_blob - flat.size
+    flat = jnp.pad(flat, (0, pad))
+    blobs = flat.reshape(n_blobs, n_per_blob)
+    meta = (treedef, [(l.shape, l.dtype) for l in leaves], pad)
+    return blobs, meta
+
+
+def _unflatten_from_blobs(blobs: jax.Array, meta) -> PyTree:
+    treedef, shapes, pad = meta
+    flat = blobs.reshape(-1)
+    if pad:
+        flat = flat[:-pad]
+    out, off = [], 0
+    for shape, dtype in shapes:
+        n = 1
+        for s in shape:
+            n *= s
+        out.append(flat[off:off + n].reshape(shape).astype(dtype))
+        off += n
+    return jax.tree.unflatten(treedef, out)
+
+
+def _blob_allreduce(blob: jax.Array, pod_axis: str, npods: int,
+                    compress: bool) -> jax.Array:
+    """All-reduce one (n,) blob across pods via a2a + local sum + gather."""
+    if npods == 1:
+        return blob
+    n = blob.shape[0]
+    pad = (-n) % npods
+    x = jnp.pad(blob, (0, pad)).reshape(npods, -1)
+    if compress:
+        q, s = compression.int8_quantize(x)
+        q = jax.lax.all_to_all(q, pod_axis, 0, 0, tiled=False)
+        s = jax.lax.all_to_all(s, pod_axis, 0, 0, tiled=False)
+        shard = jnp.sum(compression.int8_dequantize(q, s, jnp.float32),
+                        axis=0)
+        qr, sr = compression.int8_quantize(shard[None, :])
+        qg = jax.lax.all_gather(qr[0], pod_axis)
+        sg = jax.lax.all_gather(sr, pod_axis)
+        full = compression.int8_dequantize(qg, sg[:, 0], jnp.float32)
+    else:
+        x = jax.lax.all_to_all(x, pod_axis, 0, 0, tiled=False)
+        shard = jnp.sum(x, axis=0)
+        full = jax.lax.all_gather(shard, pod_axis)
+    out = full.reshape(-1)
+    return out[:n] if pad else out
+
+
+def blob_allreduce_grads(grads: PyTree, *, pod_axis: str = "pod",
+                         blob_bytes: int = 16 * 1024 * 1024,
+                         compress: bool = False,
+                         residual: Optional[jax.Array] = None,
+                         average: bool = True
+                         ) -> Tuple[PyTree, Optional[jax.Array]]:
+    """Hierarchically all-reduce a gradient pytree across pods.
+
+    ``residual``: error-feedback state (flat blobs array) when compressing;
+    pass None to disable EF. Returns (synced grads, new residual).
+    """
+    npods = jax.lax.psum(1, pod_axis)
+    blobs, meta = _flatten_to_blobs(grads, blob_bytes)
+    if compress and residual is not None:
+        target = blobs + residual
+    else:
+        target = blobs
+
+    # one collective per blob — independent ops XLA can schedule/overlap
+    reduced = jnp.stack([
+        _blob_allreduce(target[i], pod_axis, npods, compress)
+        for i in range(target.shape[0])])
+
+    new_residual = None
+    if compress and residual is not None:
+        # what this pod contributed vs what actually went out on the wire
+        sent = jnp.stack([compression.compress_decompress(target[i])
+                          for i in range(target.shape[0])])
+        new_residual = target - sent
+    if average:
+        reduced = reduced / npods
+    return _unflatten_from_blobs(reduced, meta), new_residual
+
+
+def residual_init(grads_like: PyTree, blob_bytes: int = 16 * 1024 * 1024
+                  ) -> jax.Array:
+    blobs, _ = _flatten_to_blobs(
+        jax.tree.map(jnp.zeros_like, grads_like), blob_bytes)
+    return blobs

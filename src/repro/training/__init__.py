@@ -1,0 +1,2 @@
+from repro.training.optimizer import adamw_init, adamw_update, OptConfig
+from repro.training.train_step import TrainConfig, make_train_step, make_loss_fn

@@ -1,0 +1,65 @@
+"""Small shared helpers used across the framework."""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Iterable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+PyTree = Any
+
+KiB = 1024
+MiB = 1024**2
+GiB = 1024**3
+
+
+def tree_size_bytes(tree: PyTree) -> int:
+    """Total bytes of all leaves (works on ShapeDtypeStruct and arrays)."""
+    return sum(
+        math.prod(x.shape) * jnp.dtype(x.dtype).itemsize
+        for x in jax.tree.leaves(tree)
+    )
+
+
+def tree_num_params(tree: PyTree) -> int:
+    return sum(math.prod(x.shape) for x in jax.tree.leaves(tree))
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024 or unit == "TiB":
+            return f"{n:.2f}{unit}"
+        n /= 1024
+    return f"{n:.2f}TiB"
+
+
+def cdiv(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return cdiv(a, b) * b
+
+
+def dataclass_replace(obj, **kw):
+    return dataclasses.replace(obj, **kw)
+
+
+def stable_hash64(data: bytes) -> int:
+    """Deterministic 64-bit FNV-1a hash (no Python hash randomization)."""
+    h = 0xCBF29CE484222325
+    for b in data:
+        h ^= b
+        h = (h * 0x100000001B3) & 0xFFFFFFFFFFFFFFFF
+    return h
+
+
+def percentile(values: Iterable[float], q: float) -> float:
+    arr = np.asarray(sorted(values), dtype=np.float64)
+    if arr.size == 0:
+        return float("nan")
+    return float(np.percentile(arr, q))

@@ -1,0 +1,80 @@
+"""Attention: flash (custom VJP) vs dense oracle — values and gradients."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import dense_attention, flash_attention_jnp
+from repro.models.flash import flash_attention
+
+
+def rand_qkv(key, B, Sq, Skv, H, KVH, D, dtype=jnp.float32):
+    k1, k2, k3 = jax.random.split(key, 3)
+    q = jax.random.normal(k1, (B, Sq, H, D), dtype)
+    k = jax.random.normal(k2, (B, Skv, KVH, D), dtype)
+    v = jax.random.normal(k3, (B, Skv, KVH, D), dtype)
+    return q, k, v
+
+
+CASES = [
+    # B, Sq, Skv, H, KVH, D, causal, qc, kc
+    (2, 128, 128, 4, 4, 32, True, 32, 64),
+    (2, 128, 128, 4, 2, 32, True, 64, 32),    # GQA
+    (1, 96, 96, 4, 1, 16, True, 32, 32),      # MQA, padding (96 % 64)
+    (2, 128, 128, 4, 4, 32, False, 32, 64),   # bidirectional (encoder)
+    (1, 64, 64, 2, 2, 64, True, 64, 64),      # single block
+    (2, 200, 200, 2, 2, 16, True, 64, 64),    # non-divisible lengths
+]
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KVH,D,causal,qc,kc", CASES)
+def test_flash_matches_dense(B, Sq, Skv, H, KVH, D, causal, qc, kc):
+    q, k, v = rand_qkv(jax.random.key(0), B, Sq, Skv, H, KVH, D)
+    ref = dense_attention(q, k, v, causal=causal)
+    out = flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("B,Sq,Skv,H,KVH,D,causal,qc,kc", CASES[:4])
+def test_flash_gradients_match_dense(B, Sq, Skv, H, KVH, D, causal, qc, kc):
+    q, k, v = rand_qkv(jax.random.key(1), B, Sq, Skv, H, KVH, D)
+
+    def loss_flash(q, k, v):
+        o = flash_attention(q, k, v, causal=causal, q_chunk=qc, kv_chunk=kc)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+
+    def loss_dense(q, k, v):
+        o = dense_attention(q, k, v, causal=causal)
+        return jnp.sum(jnp.sin(o.astype(jnp.float32)))
+
+    gf = jax.grad(loss_flash, argnums=(0, 1, 2))(q, k, v)
+    gd = jax.grad(loss_dense, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gf, gd):
+        np.testing.assert_allclose(a, b, atol=3e-4, rtol=3e-4)
+
+
+def test_flash_bf16_close_to_fp32_dense():
+    q, k, v = rand_qkv(jax.random.key(2), 2, 256, 256, 4, 2, 64,
+                       jnp.bfloat16)
+    ref = dense_attention(q.astype(jnp.float32), k.astype(jnp.float32),
+                          v.astype(jnp.float32), causal=True)
+    out = flash_attention(q, k, v, causal=True, q_chunk=64, kv_chunk=128)
+    np.testing.assert_allclose(out.astype(jnp.float32), ref, atol=2e-2)
+
+
+def test_legacy_chunked_matches_dense():
+    """The original loop-based oracle (kept for the Pallas kernel tests)."""
+    q, k, v = rand_qkv(jax.random.key(3), 2, 128, 128, 4, 4, 32)
+    ref = dense_attention(q, k, v, causal=True)
+    out = flash_attention_jnp(q, k, v, causal=True, q_chunk=32, kv_chunk=32)
+    np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+def test_decode_offset_matches_prefix():
+    """q_offset semantics: one-token attention == last row of full attn."""
+    B, S, H, D = 2, 64, 4, 32
+    q, k, v = rand_qkv(jax.random.key(4), B, S, S, H, H, D)
+    full = dense_attention(q, k, v, causal=True)
+    one = dense_attention(q[:, -1:], k, v, causal=True, q_offset=S - 1)
+    np.testing.assert_allclose(one[:, 0], full[:, -1], atol=1e-5)

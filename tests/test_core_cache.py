@@ -1,0 +1,92 @@
+"""Cache layers: LRU bound, single-flight, per-AZ ≤1 store GET invariant."""
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (DistributedCache, LocalCache, LRUCache,
+                        SimulatedS3, SingleFlight)
+
+
+@settings(deadline=None)
+@given(st.lists(st.tuples(st.text(min_size=1, max_size=4),
+                          st.integers(1, 64)), max_size=60),
+       st.integers(16, 128))
+def test_lru_never_exceeds_capacity(ops, capacity):
+    lru = LRUCache(capacity)
+    for key, size in ops:
+        lru.put(key, b"x" * size)
+        assert lru.size <= capacity
+        assert lru.size == sum(len(v) for v in lru.entries.values())
+
+
+def test_lru_evicts_least_recent():
+    lru = LRUCache(30)
+    lru.put("a", b"x" * 10)
+    lru.put("b", b"x" * 10)
+    lru.put("c", b"x" * 10)
+    assert lru.get("a") is not None      # refresh a
+    lru.put("d", b"x" * 10)              # evicts b (LRU)
+    assert "b" not in lru and "a" in lru and "d" in lru
+
+
+def test_single_flight_one_leader():
+    sf = SingleFlight()
+    assert sf.begin("k") is True
+    assert sf.begin("k") is False
+    assert sf.begin("k") is False
+    sf.complete("k", b"v")
+    assert sf.begin("k") is True  # new round after completion
+
+
+def test_distributed_cache_one_get_per_az():
+    """Paper §3.3: a blob is downloaded from the store at most once per AZ
+    while cached — the core cost invariant behind GET:PUT = 2:3."""
+    store = SimulatedS3(seed=0)
+    store.put("blob1", b"payload" * 100)
+    store.stats.gets = 0
+    cache = DistributedCache(az=0, members=4, capacity_per_member=1 << 20,
+                             store=store, cache_on_write=True)
+    for _ in range(50):
+        payload, _, _ = cache.read("blob1")
+        assert payload == b"payload" * 100
+    assert store.stats.gets == 1
+    assert cache.stats.misses == 1
+    assert cache.stats.hits == 49
+
+
+def test_cache_on_write_serves_same_az_reads_without_get():
+    store = SimulatedS3(seed=0)
+    cache = DistributedCache(az=0, members=2, capacity_per_member=1 << 20,
+                             store=store, cache_on_write=True)
+    cache.write("b", b"x" * 64)
+    before = store.stats.gets
+    _, _, src = cache.read("b")
+    assert src == "cache"
+    assert store.stats.gets == before
+
+
+def test_local_cache_avoids_remote_lookups():
+    store = SimulatedS3(seed=0)
+    dist = DistributedCache(az=0, members=2, capacity_per_member=1 << 20,
+                            store=store, cache_on_write=False)
+    store.put("b", b"y" * 128)
+    local = LocalCache(1 << 20, dist)
+    local.read("b")
+    hits_before = dist.stats.hits + dist.stats.misses
+    for _ in range(10):
+        _, _, src = local.read("b")
+        assert src == "local"
+    assert dist.stats.hits + dist.stats.misses == hits_before
+
+
+def test_eviction_causes_refetch():
+    store = SimulatedS3(seed=0)
+    cache = DistributedCache(az=0, members=1, capacity_per_member=100,
+                             store=store, cache_on_write=False)
+    store.put("a", b"x" * 80)
+    store.put("b", b"x" * 80)
+    cache.read("a")
+    cache.read("b")   # evicts a
+    gets = store.stats.gets
+    cache.read("a")   # refetch
+    assert store.stats.gets == gets + 1

@@ -1,0 +1,132 @@
+"""Checkpoint/restart, commit protocol at the storage layer, elastic
+restore, straggler hedging."""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import BlobCheckpointer, FileStore, latest_step
+from repro.configs import get_config
+from repro.models import lm
+from repro.models.common import init_params
+from repro.runtime import FaultTolerantTrainer, HedgedFetcher
+from repro.training import OptConfig, TrainConfig, adamw_init, \
+    make_train_step
+
+
+def make_setup(tmp_path, arch="granite-3-2b"):
+    cfg = get_config(arch, smoke=True)
+    params = init_params(lm.param_defs(cfg), jax.random.key(0))
+    opt = adamw_init(params)
+    tcfg = TrainConfig(opt=OptConfig(learning_rate=1e-3))
+    step = jax.jit(make_train_step(cfg, tcfg))
+
+    def batch_fn(i):  # deterministic, step-keyed
+        k = jax.random.key(1000 + i)
+        toks = jax.random.randint(k, (2, 16), 0, cfg.vocab_size)
+        return {"tokens": toks, "labels": toks}
+
+    store = FileStore(str(tmp_path / "ckpt"))
+    return cfg, params, opt, step, batch_fn, store
+
+
+def test_checkpoint_roundtrip_and_async(tmp_path):
+    store = FileStore(str(tmp_path / "s"))
+    ckpt = BlobCheckpointer(store, async_upload=True)
+    tree = {"w": jnp.arange(12.0).reshape(3, 4),
+            "b": jnp.ones((5,), jnp.bfloat16)}
+    ckpt.save(7, tree)
+    ckpt.wait()
+    out = ckpt.restore(7, tree)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                      np.asarray(b, np.float32))
+    assert latest_step(store) == 7
+
+
+def test_crash_before_manifest_leaves_no_checkpoint(tmp_path):
+    """Blobs without a manifest are invisible (commit protocol) and are
+    collected as orphans by retention."""
+    store = FileStore(str(tmp_path / "s"))
+    ckpt = BlobCheckpointer(store, async_upload=False)
+    tree = {"w": jnp.ones((4,))}
+    ckpt.save(1, tree)
+    ckpt.save(2, tree, crash_before_manifest=True)
+    assert latest_step(store) == 1
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(2, tree)
+    removed = store.run_retention()
+    assert removed == 1  # step-2 orphan blob GC'd
+    ckpt.restore(1, tree)  # step-1 untouched
+
+
+def test_restart_is_bit_identical(tmp_path):
+    """Training with injected failures reproduces the no-failure run."""
+    cfg, params, opt, step, batch_fn, store = make_setup(tmp_path)
+    t1 = FaultTolerantTrainer(FileStore(str(tmp_path / "a")), step,
+                              batch_fn, ckpt_every=4, async_upload=False)
+    p_ref, _, losses_ref = t1.run(params, opt, steps=12)
+    t2 = FaultTolerantTrainer(FileStore(str(tmp_path / "b")), step,
+                              batch_fn, ckpt_every=4, async_upload=False)
+    p_ft, _, losses_ft = t2.run(params, opt, steps=12,
+                                fail_at={6: 1, 10: 2})
+    assert losses_ft == pytest.approx(losses_ref, rel=1e-6)
+    for a, b in zip(jax.tree.leaves(p_ref), jax.tree.leaves(p_ft)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_elastic_restore_different_mesh(tmp_path):
+    """Save on one topology, restore onto another (8 -> 4 devices)."""
+    import subprocess, sys, textwrap
+    code = textwrap.dedent(f"""
+    import os
+    os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=8'
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.checkpoint import BlobCheckpointer, FileStore
+    from repro.configs import get_config
+    from repro.distributed.sharding import DEFAULT_RULES, named_shardings
+    from repro.launch.mesh import make_test_mesh
+    from repro.models import lm
+    from repro.models.common import init_params
+    from repro.runtime import elastic_restore_plan
+
+    cfg = get_config('granite-3-2b', smoke=True)
+    defs = lm.param_defs(cfg)
+    mesh8 = make_test_mesh(devices=8)
+    sh8 = named_shardings(defs, DEFAULT_RULES, mesh8)
+    params = jax.tree.map(jax.device_put, init_params(defs,
+                          jax.random.key(0)), sh8)
+    store = FileStore({str(tmp_path / 'e')!r})
+    ck = BlobCheckpointer(store, async_upload=False)
+    ck.save(3, params)
+
+    mesh4 = make_test_mesh(devices=4)      # different topology
+    plan = elastic_restore_plan(defs, DEFAULT_RULES, mesh4)
+    restored = ck.restore(3, params, shardings=plan['shardings'])
+    for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert len(a.sharding.device_set) <= 4
+    print('ELASTIC-OK', plan['dp_degree'])
+    """)
+    import subprocess, sys
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    r = subprocess.run([sys.executable, "-c", code],
+                       env=dict(os.environ,
+                                PYTHONPATH=os.path.join(root, "src")),
+                       capture_output=True, text=True, timeout=600)
+    assert r.returncode == 0, r.stdout + r.stderr
+    assert "ELASTIC-OK" in r.stdout
+
+
+def test_hedged_fetch_improves_heavy_tail():
+    """Hedging pays off under degraded-store incidents (heavy tail σ=0.8);
+    under the calibrated steady-state σ=0.42 the gain at p99 is marginal —
+    an honest modeling result recorded in EXPERIMENTS.md."""
+    from repro.core.store import LatencyModel
+    h = HedgedFetcher(LatencyModel(sigma=0.8), hedge_quantile=0.95, seed=0)
+    base, hedged = h.tail_improvement(16 * 1024 * 1024, n=30000, pct=99.9)
+    assert hedged < base * 0.75                   # ≥25% p99.9 cut
+    assert h.stats.hedges / h.stats.requests < 0.12  # ≤12% extra requests

@@ -1,0 +1,74 @@
+"""Launch layer: input_specs, per-cell sharding rules, analytic FLOPs.
+
+(Pure functions — no 512-device init; the dry-run itself is exercised via
+the results JSONs and subprocess runs.)
+"""
+
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import all_cells, all_skips, get_config, get_shape
+from repro.launch.specs import input_specs
+from repro.models.common import ALL_SHAPES
+
+
+def test_cell_count_matches_assignment():
+    cells = list(all_cells())
+    skips = list(all_skips())
+    assert len(cells) + len(skips) == 10 * 4  # 40 assigned cells
+    assert len(cells) == 31
+    assert len(skips) == 9
+
+
+@pytest.mark.parametrize("arch,shape_name", list(all_cells()))
+def test_input_specs_shapes(arch, shape_name):
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    specs = input_specs(cfg, shape)
+    if shape.is_decode:
+        assert specs["tokens"].shape == (shape.global_batch, 1)
+        assert specs["pos"].shape == ()
+        return
+    B, S = shape.global_batch, shape.seq_len
+    mm = cfg.multimodal
+    if mm is not None and mm.kind == "audio":
+        assert specs["frames"].shape == (B, S, cfg.d_model)
+        assert specs["frames"].dtype == jnp.bfloat16  # stub frontend
+    elif mm is not None and mm.kind == "vision":
+        P = mm.num_patches
+        assert specs["patches"].shape == (B, P, cfg.d_model)
+        assert specs["tokens"].shape == (B, S - P)
+        # patches + text tokens tile the full sequence budget
+        assert specs["patches"].shape[1] + specs["tokens"].shape[1] == S
+    else:
+        assert specs["tokens"].shape == (B, S)
+    if shape.step == "train":
+        assert specs["labels"].shape == (B, S)
+    else:
+        assert "labels" not in specs
+
+
+def test_model_flops_orders_of_magnitude():
+    from repro.launch.dryrun import model_flops  # env var already set is ok
+    cfg = get_config("qwen2-72b")
+    f = model_flops(cfg, get_shape("train_4k"))
+    # 6 * ~71e9 non-embed params * 1.048e6 tokens ≈ 4.5e17
+    assert 2e17 < f < 8e17
+    moe = get_config("deepseek-v2-lite-16b")
+    f_act = model_flops(moe, get_shape("train_4k"))
+    # active ≈ 2.7e9 of 16e9 params — MoE flops must use the active count
+    assert f_act < 6 * 16e9 * 1.05e6 * 0.4
+
+
+def test_mamba2_active_equals_total():
+    cfg = get_config("mamba2-130m")
+    assert cfg.active_param_count() == cfg.param_count()
+    assert 1.1e8 < cfg.param_count() < 1.6e8  # ≈130M
+
+
+def test_moe_active_param_count():
+    cfg = get_config("deepseek-v2-lite-16b")
+    total = cfg.param_count()
+    active = cfg.active_param_count()
+    assert 14e9 < total < 18e9       # ≈16B total
+    assert active < total * 0.25     # top-6 of 64 experts + shared
