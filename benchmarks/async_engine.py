@@ -1,0 +1,99 @@
+"""Async-engine sweeps: the paper's Fig.-style latency-vs-batch-interval
+and cost-vs-throughput curves, plus the overlap (makespan) comparison,
+measured on the event-driven engine under a ShuffleBench-style open
+workload. Rows follow the harness CSV contract (name, us, derived)."""
+
+from __future__ import annotations
+
+import time
+from typing import List, Optional, Tuple
+
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig, EngineConfig,
+                        WorkloadConfig, drive)
+
+Row = Tuple[str, float, str]
+
+
+def _run(cfg: BlobShuffleConfig, ecfg: EngineConfig, wl: WorkloadConfig,
+         n_instances: int = 6):
+    eng = AsyncShuffleEngine(cfg, ecfg, n_instances=n_instances,
+                             exactly_once=False, seed=wl.seed)
+    drive(eng, wl)
+    metrics = eng.run()
+    return eng, metrics, metrics.summary(eng.store)
+
+
+def latency_vs_batch_interval(intervals=(0.1, 0.25, 0.5, 1.0),
+                              rate: float = 4000.0) -> List[Row]:
+    """Shuffle latency percentiles + $/GiB as the max batching interval
+    sweeps (paper Fig. 6a/6d analogue, measured not modeled)."""
+    rows: List[Row] = []
+    for iv in intervals:
+        cfg = BlobShuffleConfig(batch_bytes=8 << 20, max_interval_s=iv,
+                                num_partitions=9, num_az=3)
+        wl = WorkloadConfig(arrival_rate=rate, duration_s=3.0,
+                            record_bytes=1024, key_skew=0.5, seed=7)
+        t0 = time.perf_counter()
+        _, m, s = _run(cfg, EngineConfig(), wl)
+        wall = (time.perf_counter() - t0) * 1e6
+        rows.append((f"async.latency.interval={iv}", wall,
+                     f"p50={s['p50_s']:.3f}s p95={s['p95_s']:.3f}s "
+                     f"p99={s['p99_s']:.3f}s cost=${s['cost_per_gib']:.4f}/GiB "
+                     f"n={m.records_delivered}"))
+    return rows
+
+
+def cost_vs_throughput(rates=(1000.0, 4000.0, 16000.0)) -> List[Row]:
+    """$/GiB and achieved latency as offered load sweeps (Fig. 7
+    analogue): request costs amortize as batches fill before the interval
+    expires."""
+    rows: List[Row] = []
+    for rate in rates:
+        cfg = BlobShuffleConfig(batch_bytes=4 << 20, max_interval_s=0.5,
+                                num_partitions=9, num_az=3)
+        wl = WorkloadConfig(arrival_rate=rate, duration_s=3.0,
+                            record_bytes=1024, key_skew=0.5, seed=7)
+        t0 = time.perf_counter()
+        _, m, s = _run(cfg, EngineConfig(), wl)
+        wall = (time.perf_counter() - t0) * 1e6
+        rows.append((f"async.cost.rate={rate:g}rec_s", wall,
+                     f"tput={s['throughput_bytes_s'] / 2**20:.2f}MiB/s "
+                     f"p95={s['p95_s']:.3f}s "
+                     f"cost=${s['cost_per_gib']:.4f}/GiB"))
+    return rows
+
+
+def overlap_makespan(parallelism=(1, 4, 8)) -> List[Row]:
+    """Fixed workload, sweep in-flight I/O: with upload parallelism >= 4
+    the makespan must come out below the single-in-flight configuration
+    of the same engine (the acceptance gate for the async refactor)."""
+    cfg = BlobShuffleConfig(batch_bytes=256 * 1024, max_interval_s=0.5,
+                            num_partitions=9, num_az=3)
+    wl = WorkloadConfig(arrival_rate=4000, duration_s=3.0,
+                        record_bytes=1024, key_skew=0.5, seed=1)
+    rows: List[Row] = []
+    base: Optional[float] = None
+    for par in parallelism:
+        ecfg = EngineConfig(upload_parallelism=par,
+                            fetch_parallelism=max(par, 1))
+        t0 = time.perf_counter()
+        _, m, s = _run(cfg, ecfg, wl)
+        wall = (time.perf_counter() - t0) * 1e6
+        if par == 1:
+            base = s["makespan_s"]
+        speedup = base / s["makespan_s"] if base else float("nan")
+        rows.append((f"async.overlap.parallelism={par}", wall,
+                     f"makespan={s['makespan_s']:.3f}s "
+                     f"p50={s['p50_s']:.3f}s speedup={speedup:.2f}x"))
+    return rows
+
+
+def run() -> List[Row]:
+    return (latency_vs_batch_interval() + cost_vs_throughput()
+            + overlap_makespan())
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -32,10 +32,14 @@ def _dryrun_summary(out_dir="results/dryrun"):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=["all", "paper", "tpu", "kernels", "dryrun"])
+                    choices=["all", "paper", "async", "tpu", "kernels",
+                             "dryrun"])
     args = ap.parse_args()
 
     rows = []
+    if args.suite in ("all", "async"):
+        from benchmarks import async_engine
+        rows += async_engine.run()
     if args.suite in ("all", "paper"):
         from benchmarks import paper_figs as F
         rows += F.fig5_latency_cdf()

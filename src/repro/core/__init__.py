@@ -12,9 +12,14 @@ from repro.core.cache import (LRUCache, SingleFlight, DistributedCache,
 from repro.core.batcher import Batcher, BlobShuffleConfig
 from repro.core.debatcher import Debatcher
 from repro.core.commit import CommitCoordinator
+from repro.core.events import EventLoop
+from repro.core.engine import (AsyncShuffleEngine, EngineConfig,
+                               ShuffleMetrics)
+from repro.core.workload import WorkloadConfig, drive, generate
 from repro.core.pipeline import BlobShufflePipeline
 from repro.core.analytical import ModelParams
 from repro.core.capacity import CapacityModel
 from repro.core.costs import (AwsPrices, blobshuffle_cost_per_hour,
                               kafka_shuffle_cost_per_hour)
-from repro.core.simulator import SimConfig, SimResult, simulate
+from repro.core.simulator import (SimConfig, SimResult, simulate,
+                                  simulate_async)

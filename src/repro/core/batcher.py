@@ -60,11 +60,20 @@ class Batcher:
     def __init__(self, cfg: BlobShuffleConfig,
                  partition_to_az: Callable[[int], int],
                  partitioner: Callable[[bytes], int],
-                 cache: DistributedCache):
+                 cache: DistributedCache,
+                 uploader: Optional[Callable[
+                     [Blob, List[Notification], Dict[int, List[Record]],
+                      float], None]] = None):
         self.cfg = cfg
         self.partition_to_az = partition_to_az
         self.partitioner = partitioner
         self.cache = cache
+        # Event-driven hook: when set, finalized blobs are handed to
+        # ``uploader(blob, notes, per_partition_records, now)`` instead of
+        # being written synchronously — the async engine queues them on a
+        # bounded per-instance upload lane and completes them on the
+        # virtual clock. ``pending``/``ready`` stay empty in that mode.
+        self.uploader = uploader
         # az -> partition -> [records]; az -> bytes
         self.buffers: Dict[int, Dict[int, List[Record]]] = {}
         self.buffer_bytes: Dict[int, int] = {}
@@ -104,13 +113,30 @@ class Batcher:
             self.stats.notifications += len(p.notifications)
         return out
 
+    def flush_due(self, now: float) -> None:
+        """Finalize every buffer whose max batching interval has elapsed
+        (called from the engine's per-buffer timer events — the sync path
+        piggybacks the same check on record arrival)."""
+        for az in list(self.buffers):
+            if (self.buffer_bytes.get(az, 0) > 0 and
+                    now - self.last_finalize.get(az, now)
+                    >= self.cfg.max_interval_s):
+                self._finalize(az, now, "interval")
+
+    def flush_all(self, now: float) -> None:
+        """Commit-path finalize of every non-empty buffer."""
+        for az in list(self.buffers):
+            if self.buffer_bytes.get(az, 0) > 0:
+                self._finalize(az, now, "commit")
+
+    def buffered_bytes(self) -> int:
+        return sum(self.buffer_bytes.values())
+
     # -- commit protocol ----------------------------------------------------
     def on_commit(self, now: float) -> Tuple[List[Notification], float]:
         """Finalize all buffers and BLOCK until outstanding uploads are
         durable; returns (notifications, commit-block seconds)."""
-        for az in list(self.buffers):
-            if self.buffer_bytes.get(az, 0) > 0:
-                self._finalize(az, now, "commit")
+        self.flush_all(now)
         block_until = max((p.completes_at for p in self.pending),
                           default=now)
         notes: List[Notification] = []
@@ -130,8 +156,11 @@ class Batcher:
         if not parts:
             return
         blob, notes = build_blob(parts, target_az=az)
-        lat = self.cache.write(blob.blob_id, blob.payload, now)
-        self.pending.append(PendingUpload(blob, notes, now, now + lat))
+        if self.uploader is not None:
+            self.uploader(blob, notes, parts, now)
+        else:
+            lat = self.cache.write(blob.blob_id, blob.payload, now)
+            self.pending.append(PendingUpload(blob, notes, now, now + lat))
         self.stats.blobs += 1
         self.stats.blob_bytes += blob.size
         setattr(self.stats, f"finalize_{why}",

@@ -114,6 +114,29 @@ class DistributedCache:
             self.members[self.owner_of(blob_id)].put(blob_id, payload)
         return lat
 
+    # -- event-driven API (async engine path) ------------------------------
+    def probe(self, blob_id: str) -> Optional[bytes]:
+        """Non-blocking owner lookup used by the engine's GET path: returns
+        the payload on a hit (counting it), None on a miss. The engine then
+        decides between coalescing onto an in-flight download and leading a
+        store GET, and inserts via ``fill`` at the completion event — so
+        cache fills genuinely race concurrent reads on the virtual clock."""
+        hit = self.members[self.owner_of(blob_id)].get(blob_id)
+        if hit is not None:
+            self.stats.hits += 1
+        return hit
+
+    def note_miss(self, coalesced: bool = False) -> None:
+        """Account a probe miss (coalesced = served by in-flight leader)."""
+        if coalesced:
+            self.stats.coalesced += 1
+        else:
+            self.stats.misses += 1
+
+    def fill(self, blob_id: str, payload: bytes) -> None:
+        """Insert into the owning member (write-through or GET completion)."""
+        self.members[self.owner_of(blob_id)].put(blob_id, payload)
+
     def read(self, blob_id: str, now: float = 0.0) -> Tuple[bytes, float, str]:
         """Read path. Returns (payload, latency, source) where source is
         one of "cache" | "store" | "coalesced" (latency excludes queueing
@@ -145,6 +168,12 @@ class LocalCache:
     def __init__(self, capacity_bytes: int, remote: DistributedCache):
         self.lru = LRUCache(capacity_bytes)
         self.remote = remote
+
+    def probe(self, blob_id: str) -> Optional[bytes]:
+        return self.lru.get(blob_id)
+
+    def fill(self, blob_id: str, payload: bytes) -> None:
+        self.lru.put(blob_id, payload)
 
     def read(self, blob_id: str, now: float = 0.0) -> Tuple[bytes, float, str]:
         hit = self.lru.get(blob_id)

@@ -14,7 +14,7 @@ never referenced) stay unreachable and are collected by retention.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Optional, Set, Tuple
 
 from repro.core.batcher import Batcher
 from repro.core.blob import Notification
@@ -41,6 +41,10 @@ class CommitCoordinator:
         self.uncommitted: List[Record] = []   # source records since commit
         self.unpublished: List[Notification] = []
         self.stats = CommitStats()
+        # async-engine state: blobs whose PUT is still in flight, and the
+        # start time of a commit waiting for them to drain (None = idle)
+        self.outstanding: Set[str] = set()
+        self._commit_started: Optional[float] = None
 
     def process(self, rec: Record, now: float) -> None:
         self.uncommitted.append(rec)
@@ -62,6 +66,52 @@ class CommitCoordinator:
         self.stats.commit_block_s += blocked
         return blocked
 
+    # -- event-driven commit protocol (async engine path) -------------------
+    # Notifications of in-flight uploads reach ``unpublished`` only at the
+    # upload's completion event; a commit therefore happens in two halves:
+    # ``begin_commit`` flushes the buffers (enqueueing the tail uploads)
+    # and ``try_finish_commit`` completes once ``outstanding`` drains —
+    # publishing everything at once, which is the read-committed visibility
+    # that preserves exactly-once under reordering and replay.
+    def note_upload_started(self, blob_id: str) -> None:
+        self.outstanding.add(blob_id)
+
+    def note_upload_complete(self, blob_id: str,
+                             notes: List[Notification],
+                             publish_now: bool) -> None:
+        """Record a durable upload. ``publish_now`` is the at-least-once
+        mode: notifications fan out immediately (a crash after this point
+        produces duplicates downstream); exactly-once defers them to the
+        next commit."""
+        self.outstanding.discard(blob_id)
+        if publish_now:
+            for note in notes:
+                self.publish(note)
+        else:
+            self.unpublished.extend(notes)
+
+    def begin_commit(self, now: float) -> None:
+        """First half of an async commit: flush buffers into the upload
+        lane. If a commit is already waiting, the new one merges with it
+        (its notifications ride along when ``outstanding`` drains)."""
+        self.batcher.flush_all(now)
+        if self._commit_started is None:
+            self._commit_started = now
+
+    def try_finish_commit(self, now: float) -> bool:
+        """Second half: once every outstanding upload is durable, publish
+        the batch of notifications and mark the offsets committed."""
+        if self._commit_started is None or self.outstanding:
+            return False
+        for note in self.unpublished:
+            self.publish(note)
+        self.unpublished.clear()
+        self.uncommitted.clear()
+        self.stats.commits += 1
+        self.stats.commit_block_s += now - self._commit_started
+        self._commit_started = None
+        return True
+
     def fail_and_restart(self, now: float) -> List[Record]:
         """Crash before commit: uploads may be orphaned; notifications not
         yet published are lost; uncommitted source records replay."""
@@ -76,4 +126,6 @@ class CommitCoordinator:
         self.batcher.buffer_bytes.clear()
         self.unpublished.clear()
         self.uncommitted.clear()
+        self.outstanding.clear()
+        self._commit_started = None
         return replay

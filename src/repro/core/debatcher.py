@@ -38,28 +38,43 @@ class Debatcher:
         self.inflight_until: float = 0.0
         self.stats = DebatcherStats()
 
-    def process(self, note: Notification, now: float
-                ) -> Tuple[List[Record], float, str]:
-        """Resolve one notification. Returns (records, latency, source)."""
+    def begin(self, note: Notification) -> bool:
+        """Admit one notification: False if it is a duplicate that must be
+        dropped. Under exactly-once the (blob, partition) key is CLAIMED
+        here — before the fetch is issued — so duplicate or reordered
+        notifications arriving while the first fetch is still in flight
+        cannot trigger a second delivery."""
         self.stats.notifications += 1
         key = (note.blob_id, note.partition)
-        if self.exactly_once and key in self.seen:
-            self.stats.duplicates_dropped += 1
+        if self.exactly_once:
+            if key in self.seen:
+                self.stats.duplicates_dropped += 1
+                return False
+            self.seen.add(key)
+        return True
+
+    def complete(self, note: Notification, payload: bytes, lat: float,
+                 src: str, now: float) -> List[Record]:
+        """Deliver one admitted notification from its fetched payload."""
+        setattr(self.stats, f"reads_{src}",
+                getattr(self.stats, f"reads_{src}") + 1)
+        recs = extract(payload, note.byte_range)
+        self.stats.records_out += len(recs)
+        self.stats.bytes_out += note.byte_range.length
+        self.inflight_until = max(self.inflight_until, now + lat)
+        return recs
+
+    def process(self, note: Notification, now: float
+                ) -> Tuple[List[Record], float, str]:
+        """Resolve one notification synchronously (functional path).
+        Returns (records, latency, source)."""
+        if not self.begin(note):
             return [], 0.0, "duplicate"
         if self.local is not None:
             payload, lat, src = self.local.read(note.blob_id, now)
         else:
             payload, lat, src = self.cache.read(note.blob_id, now)
-        getattr(self.stats, f"reads_{src}")
-        setattr(self.stats, f"reads_{src}",
-                getattr(self.stats, f"reads_{src}") + 1)
-        recs = extract(payload, note.byte_range)
-        if self.exactly_once:
-            self.seen.add(key)
-        self.stats.records_out += len(recs)
-        self.stats.bytes_out += note.byte_range.length
-        self.inflight_until = max(self.inflight_until, now + lat)
-        return recs, lat, src
+        return self.complete(note, payload, lat, src, now), lat, src
 
     def on_commit(self, now: float) -> float:
         """Block the commit until all outstanding reads completed."""

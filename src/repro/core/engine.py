@@ -1,0 +1,390 @@
+"""Event-driven async BlobShuffle engine (virtual clock).
+
+Replaces the strictly sequential PUT → notify → GET → commit execution of
+the original pipeline facade with a discrete-event model of the paper's
+actual concurrency structure (§3, §5):
+
+  * finalized blobs enter a **bounded per-instance upload lane**
+    (``upload_parallelism`` in-flight PUTs; the rest queue), with PUT
+    completions sampled from ``SimulatedS3``'s lognormal latency model;
+  * notification **fan-out** is asynchronous: each contributing partition's
+    notification is delivered to the destination AZ's Debatcher after a
+    messaging delay;
+  * Debatchers **prefetch**: up to ``fetch_parallelism`` speculative GETs
+    are issued the moment notifications arrive, so retrieval latency
+    overlaps both other GETs and the producers' uploads;
+  * **cache fills race reads**: the write-through fill lands one event
+    after PUT completion, so an early prefetch can miss the cache, lead a
+    store GET, and later requests coalesce onto it (single-flight);
+  * **commits route through ``CommitCoordinator``**: a commit begins by
+    flushing buffers into the upload lane and finishes only when every
+    outstanding PUT is durable; under exactly-once, notifications become
+    visible in commit batches (read-committed), so duplicate, reordered,
+    or replayed work never double-delivers downstream.
+
+Everything runs on the deterministic ``EventLoop`` in
+``repro.core.events`` — a fixed seed reproduces the exact event order.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from collections import defaultdict, deque
+from typing import Callable, Deque, Dict, List, Optional, Set, Tuple
+
+import numpy as np
+
+from repro.core.batcher import Batcher, BlobShuffleConfig
+from repro.core.blob import Blob, Notification
+from repro.core.cache import DistributedCache, LocalCache
+from repro.core.commit import CommitCoordinator
+from repro.core.debatcher import Debatcher
+from repro.core.events import EventLoop
+from repro.core.records import Record, default_partitioner
+from repro.core.store import SimulatedS3
+
+GiB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    """Concurrency knobs of the async engine.
+
+    ``upload_parallelism = fetch_parallelism = 1`` degenerates to the old
+    synchronous single-in-flight execution — the baseline the paper's
+    batching/caching design is measured against.
+    """
+    upload_parallelism: int = 4        # in-flight PUTs per instance
+    fetch_parallelism: int = 8         # in-flight GETs per AZ Debatcher
+    commit_interval_s: Optional[float] = None  # None: commit on drain only
+    notification_latency_s: float = 0.002      # messaging-layer delay
+    cache_fill_latency_s: float = 0.001        # write-through fill delay
+    rpc_latency_s: float = 0.0005              # intra-AZ cache RPC
+    local_latency_s: float = 0.00005           # local-cache lookup
+
+
+@dataclasses.dataclass
+class ShuffleMetrics:
+    """Per-run measurements: end-to-end record latency = delivery time
+    minus source arrival time (includes batching wait, upload-lane
+    queueing, PUT, notification, fetch queueing, and GET)."""
+    records_in: int = 0
+    records_delivered: int = 0
+    records_replayed: int = 0
+    bytes_delivered: int = 0
+    duplicates_delivered: int = 0
+    makespan_s: float = 0.0
+    record_latencies: List[float] = dataclasses.field(default_factory=list)
+    put_latencies: List[float] = dataclasses.field(default_factory=list)
+    get_latencies: List[float] = dataclasses.field(default_factory=list)
+
+    def latency_p(self, q: float) -> float:
+        if not self.record_latencies:
+            return float("nan")
+        return float(np.percentile(self.record_latencies, q))
+
+    def summary(self, store: SimulatedS3) -> Dict[str, float]:
+        shuffled_gib = store.stats.put_bytes / GiB
+        cost = store.stats.cost_usd(store.costs, store.retention_s)
+        return {
+            "records": float(self.records_delivered),
+            "p50_s": self.latency_p(50),
+            "p95_s": self.latency_p(95),
+            "p99_s": self.latency_p(99),
+            "makespan_s": self.makespan_s,
+            "throughput_bytes_s": (self.bytes_delivered / self.makespan_s
+                                   if self.makespan_s > 0 else 0.0),
+            "cost_usd": cost,
+            "cost_per_gib": cost / shuffled_gib if shuffled_gib else 0.0,
+        }
+
+
+@dataclasses.dataclass
+class _Fetch:
+    note: Notification
+    enqueued_at: float
+
+
+class AsyncShuffleEngine:
+    """Virtual-clock BlobShuffle topology: n instances × num_az AZs."""
+
+    def __init__(self, cfg: BlobShuffleConfig,
+                 engine_cfg: Optional[EngineConfig] = None, *,
+                 n_instances: int = 3, store: Optional[SimulatedS3] = None,
+                 seed: int = 0, exactly_once: bool = True):
+        self.cfg = cfg
+        self.ecfg = engine_cfg or EngineConfig()
+        self.n_instances = n_instances
+        self.exactly_once = exactly_once
+        self.loop = EventLoop()
+        self.store = store or SimulatedS3(seed=seed,
+                                          retention_s=cfg.retention_s)
+        self.caches = [
+            DistributedCache(az, max(n_instances // cfg.num_az, 1),
+                             cfg.distributed_cache_bytes, self.store,
+                             cfg.cache_on_write)
+            for az in range(cfg.num_az)]
+        self.debatchers: List[Debatcher] = []
+        for az in range(cfg.num_az):
+            local = (LocalCache(cfg.local_cache_bytes, self.caches[az])
+                     if cfg.local_cache_bytes else None)
+            self.debatchers.append(
+                Debatcher(az, self.caches[az], local,
+                          exactly_once=exactly_once))
+        self.batchers: List[Batcher] = []
+        self.coordinators: List[CommitCoordinator] = []
+        for i in range(n_instances):
+            az = i % cfg.num_az
+            b = Batcher(cfg, self.partition_to_az,
+                        lambda key: default_partitioner(
+                            key, cfg.num_partitions),
+                        self.caches[az], uploader=self._make_uploader(i))
+            self.batchers.append(b)
+            self.coordinators.append(
+                CommitCoordinator(b, self.debatchers, self._publish))
+
+        # producer side: per-instance bounded upload lanes
+        self._upload_q: List[Deque[Tuple[Blob, List[Notification]]]] = \
+            [deque() for _ in range(n_instances)]
+        self._uploads_inflight = [0] * n_instances
+        self._epoch = [0] * n_instances    # bumped on failure injection
+        # consumer side: per-AZ fetch queues + single-flight tracking
+        self._fetch_q: List[Deque[_Fetch]] = [deque()
+                                              for _ in range(cfg.num_az)]
+        self._fetch_inflight = [0] * cfg.num_az
+        self._get_inflight: Dict[Tuple[int, str], float] = {}
+        # source arrival bookkeeping for end-to-end latency
+        self._arrivals: Dict[Tuple[int, int], Deque[float]] = \
+            defaultdict(deque)
+        self._blob_arrivals: Dict[Tuple[str, int], List[float]] = {}
+        self._flush_timers: Set[Tuple[int, int]] = set()
+        self._pending_ingests = 0
+        self._rr = 0
+        self._t_done = 0.0
+        self.out: Dict[int, List[Record]] = defaultdict(list)
+        self.published: List[Notification] = []
+        self.metrics = ShuffleMetrics()
+
+    def partition_to_az(self, partition: int) -> int:
+        return partition % self.cfg.num_az
+
+    # -- ingest -----------------------------------------------------------
+    def submit(self, t: float, rec: Record,
+               inst: Optional[int] = None) -> None:
+        """Schedule one source record to arrive at instance ``inst`` (or
+        round-robin) at virtual time ``t``."""
+        if inst is None:
+            inst = self._rr
+            self._rr = (self._rr + 1) % self.n_instances
+        self._pending_ingests += 1
+        self.metrics.records_in += 1
+        self.loop.at(t, self._ingest, inst, rec)
+
+    def _ingest(self, i: int, rec: Record) -> None:
+        now = self.loop.now
+        b = self.batchers[i]
+        part = b.partitioner(rec.key)
+        az = self.partition_to_az(part)
+        # arrival enters the FIFO before Batcher.process so a size-triggered
+        # finalize inside process() already sees it
+        self._arrivals[(i, part)].append(now)
+        self.coordinators[i].process(rec, now)
+        if (b.buffer_bytes.get(az, 0) > 0
+                and (i, az) not in self._flush_timers):
+            self._flush_timers.add((i, az))
+            self.loop.after(self.cfg.max_interval_s + 1e-9,
+                            self._flush_check, i, az)
+        self._pending_ingests -= 1
+        if self._pending_ingests == 0:
+            # sources drained: flush + commit whatever remains
+            self.loop.after(1e-6, self._commit_all)
+
+    def _flush_check(self, i: int, az: int) -> None:
+        b = self.batchers[i]
+        self._flush_timers.discard((i, az))
+        if b.buffer_bytes.get(az, 0) <= 0:
+            return
+        due = b.last_finalize.get(az, self.loop.now) + b.cfg.max_interval_s
+        if self.loop.now >= due - 1e-12:
+            b.flush_due(self.loop.now)
+        else:
+            self._flush_timers.add((i, az))
+            self.loop.at(due + 1e-9, self._flush_check, i, az)
+
+    # -- upload lane ------------------------------------------------------
+    def _make_uploader(self, i: int) -> Callable:
+        def uploader(blob: Blob, notes: List[Notification],
+                     parts: Dict[int, List[Record]], now: float) -> None:
+            for part, recs in parts.items():
+                q = self._arrivals.get((i, part))
+                n = min(len(recs), len(q)) if q else 0
+                self._blob_arrivals[(blob.blob_id, part)] = \
+                    [q.popleft() for _ in range(n)]
+            self.coordinators[i].note_upload_started(blob.blob_id)
+            self._upload_q[i].append((blob, notes))
+            self._pump_uploads(i)
+        return uploader
+
+    def _pump_uploads(self, i: int) -> None:
+        cap = max(1, self.ecfg.upload_parallelism)
+        while self._uploads_inflight[i] < cap and self._upload_q[i]:
+            blob, notes = self._upload_q[i].popleft()
+            self._uploads_inflight[i] += 1
+            lat = self.store.begin_put(blob.size)
+            self.loop.after(lat, self._upload_done, i, blob, notes, lat,
+                            self._epoch[i])
+
+    def _upload_done(self, i: int, blob: Blob, notes: List[Notification],
+                     lat: float, epoch: int) -> None:
+        if epoch != self._epoch[i]:
+            return  # instance crashed mid-upload: connection died with it
+        now = self.loop.now
+        self.store.finish_put(blob.blob_id, blob.payload, now)
+        self.metrics.put_latencies.append(lat)
+        self._uploads_inflight[i] -= 1
+        if self.cfg.cache_on_write:
+            # write-through lands in the WRITER's AZ cluster (paper §3.3):
+            # same-AZ consumers hit it; cross-AZ consumers still lead one
+            # store GET into their own cluster (model's 2/3 GET ratio)
+            self.loop.after(self.ecfg.cache_fill_latency_s,
+                            self.caches[i % self.cfg.num_az].fill,
+                            blob.blob_id, blob.payload)
+        c = self.coordinators[i]
+        c.note_upload_complete(blob.blob_id, notes,
+                               publish_now=not self.exactly_once)
+        if c.try_finish_commit(now):
+            self._t_done = max(self._t_done, now)
+        self._pump_uploads(i)
+
+    # -- notification fan-out + prefetching fetch lane --------------------
+    def _publish(self, note: Notification) -> None:
+        self.published.append(note)
+        self.loop.after(self.ecfg.notification_latency_s, self._notify,
+                        note)
+
+    def _notify(self, note: Notification) -> None:
+        az = note.target_az
+        if not self.debatchers[az].begin(note):
+            return  # duplicate claimed/dropped before any fetch is issued
+        self._fetch_q[az].append(_Fetch(note, self.loop.now))
+        self._pump_fetches(az)
+
+    def _pump_fetches(self, az: int) -> None:
+        cap = max(1, self.ecfg.fetch_parallelism)
+        while self._fetch_inflight[az] < cap and self._fetch_q[az]:
+            f = self._fetch_q[az].popleft()
+            self._fetch_inflight[az] += 1
+            self._issue_fetch(az, f)
+
+    def _issue_fetch(self, az: int, f: _Fetch) -> None:
+        blob_id = f.note.blob_id
+        d = self.debatchers[az]
+        cache = self.caches[az]
+        if d.local is not None:
+            hit = d.local.probe(blob_id)
+            if hit is not None:
+                self.loop.after(self.ecfg.local_latency_s,
+                                self._fetch_done, az, f, hit, "local")
+                return
+        hit = cache.probe(blob_id)
+        if hit is not None:
+            self.loop.after(self.ecfg.rpc_latency_s,
+                            self._fetch_done, az, f, hit, "cache")
+            return
+        key = (az, blob_id)
+        leader_done = self._get_inflight.get(key)
+        if leader_done is not None:
+            # single-flight: ride the in-flight download, complete just
+            # after the leader does
+            cache.note_miss(coalesced=True)
+            delay = max(0.0, leader_done - self.loop.now) \
+                + self.ecfg.rpc_latency_s
+            self.loop.after(delay, self._coalesced_done, az, f)
+            return
+        cache.note_miss(coalesced=False)
+        cache.store_gets += 1
+        _, lat = self.store.begin_get(blob_id)
+        self.metrics.get_latencies.append(lat)
+        self._get_inflight[key] = self.loop.now + lat
+        self.loop.after(lat, self._store_get_done, az, f)
+
+    def _store_get_done(self, az: int, f: _Fetch) -> None:
+        blob_id = f.note.blob_id
+        payload = self.store.payload(blob_id)
+        self.caches[az].fill(blob_id, payload)
+        self._get_inflight.pop((az, blob_id), None)
+        self._fetch_done(az, f, payload, "store")
+
+    def _coalesced_done(self, az: int, f: _Fetch) -> None:
+        self._fetch_done(az, f, self.store.payload(f.note.blob_id),
+                         "coalesced")
+
+    def _fetch_done(self, az: int, f: _Fetch, payload: bytes,
+                    src: str) -> None:
+        now = self.loop.now
+        d = self.debatchers[az]
+        if d.local is not None and src != "local":
+            d.local.fill(f.note.blob_id, payload)
+        recs = d.complete(f.note, payload, 0.0, src, now)
+        self.out[f.note.partition].extend(recs)
+        self.metrics.records_delivered += len(recs)
+        self.metrics.bytes_delivered += f.note.byte_range.length
+        arrivals = self._blob_arrivals.pop(
+            (f.note.blob_id, f.note.partition), None)
+        if arrivals is None:
+            self.metrics.duplicates_delivered += len(recs)
+        else:
+            for t0 in arrivals:
+                self.metrics.record_latencies.append(now - t0)
+        self._t_done = max(self._t_done, now)
+        self._fetch_inflight[az] -= 1
+        self._pump_fetches(az)
+
+    # -- commits + failure injection --------------------------------------
+    def commit_at(self, t: float) -> None:
+        self.loop.at(t, self._commit_all)
+
+    def _commit_all(self) -> None:
+        now = self.loop.now
+        for c in self.coordinators:
+            if (c.batcher.buffered_bytes() == 0 and not c.outstanding
+                    and not c.unpublished and not c.uncommitted
+                    and c._commit_started is None):
+                continue    # nothing to commit: don't extend the makespan
+            c.begin_commit(now)
+            if c.try_finish_commit(now):
+                self._t_done = max(self._t_done, now)
+
+    def _commit_tick(self, interval: float) -> None:
+        self._commit_all()
+        if (self._pending_ingests > 0
+                or any(b.buffered_bytes() for b in self.batchers)):
+            self.loop.after(interval, self._commit_tick, interval)
+
+    def fail_at(self, t: float, inst: int) -> None:
+        """Inject a crash of ``inst`` at time ``t``: queued/in-flight
+        uploads and buffers are lost, uncommitted records replay."""
+        self.loop.at(t, self._fail, inst)
+
+    def _fail(self, i: int) -> None:
+        now = self.loop.now
+        self._epoch[i] += 1
+        self._upload_q[i].clear()
+        self._uploads_inflight[i] = 0
+        replay = self.coordinators[i].fail_and_restart(now)
+        for key in [k for k in self._arrivals if k[0] == i]:
+            self._arrivals[key].clear()   # buffered records were lost
+        self.metrics.records_replayed += len(replay)
+        for k, rec in enumerate(replay):
+            self.submit(now + (k + 1) * 1e-6, rec)
+
+    # -- driver ------------------------------------------------------------
+    def run(self, until: Optional[float] = None) -> ShuffleMetrics:
+        """Run the event loop to completion (all submitted records
+        delivered, all commits finished) and return the metrics."""
+        ci = self.ecfg.commit_interval_s
+        if ci:
+            self.loop.after(ci, self._commit_tick, ci)
+        self.loop.run(until)
+        self.metrics.makespan_s = self._t_done
+        return self.metrics

@@ -4,62 +4,47 @@ a single-process, multi-instance topology (used by examples and tests).
     shuffle = BlobShufflePipeline(config)
     out = shuffle.run(records)   # records routed to per-partition outputs
 
-Internally: per-instance Batchers → simulated S3 + per-AZ distributed
-caches (+ optional local caches) → per-AZ Debatchers, with periodic
-commits through the CommitCoordinator.
+Since the async-engine refactor this is a thin driver over
+``repro.core.engine.AsyncShuffleEngine``: records are scheduled on the
+virtual clock, commits (and injected failures) become events, and the
+event loop runs to quiescence — so the same execution model that powers
+the latency/cost sweeps also backs the functional API. Exactly-once
+semantics are unchanged: replayed records re-enter the topology and the
+Debatchers' (blob, partition) dedup plus commit-batched notification
+visibility keep the output duplicate-free.
 """
 
 from __future__ import annotations
 
-import dataclasses
-from collections import defaultdict
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional
 
-from repro.core.batcher import Batcher, BlobShuffleConfig
-from repro.core.blob import Notification
-from repro.core.cache import DistributedCache, LocalCache
-from repro.core.commit import CommitCoordinator
-from repro.core.debatcher import Debatcher
-from repro.core.records import Record, default_partitioner
+from repro.core.batcher import BlobShuffleConfig
+from repro.core.engine import AsyncShuffleEngine, EngineConfig
+from repro.core.records import Record
 from repro.core.store import SimulatedS3
 
 
 class BlobShufflePipeline:
     def __init__(self, cfg: BlobShuffleConfig, *, n_instances: int = 3,
                  store: Optional[SimulatedS3] = None, seed: int = 0,
-                 exactly_once: bool = True):
+                 exactly_once: bool = True,
+                 engine_cfg: Optional[EngineConfig] = None):
         self.cfg = cfg
         self.n_instances = n_instances
-        self.store = store or SimulatedS3(seed=seed,
-                                          retention_s=cfg.retention_s)
-        self.caches = [
-            DistributedCache(az, max(n_instances // cfg.num_az, 1),
-                             cfg.distributed_cache_bytes, self.store,
-                             cfg.cache_on_write)
-            for az in range(cfg.num_az)]
-        self.notifications: List[Notification] = []
-        self.batchers: List[Batcher] = []
-        self.coordinators: List[CommitCoordinator] = []
-        self.debatchers: List[Debatcher] = []
-        for az in range(cfg.num_az):
-            local = (LocalCache(cfg.local_cache_bytes, self.caches[az])
-                     if cfg.local_cache_bytes else None)
-            self.debatchers.append(
-                Debatcher(az, self.caches[az], local,
-                          exactly_once=exactly_once))
-        for i in range(n_instances):
-            az = i % cfg.num_az
-            b = Batcher(cfg, self.partition_to_az,
-                        lambda key: default_partitioner(
-                            key, cfg.num_partitions),
-                        self.caches[az])
-            self.batchers.append(b)
-            self.coordinators.append(
-                CommitCoordinator(b, self.debatchers,
-                                  self.notifications.append))
+        self.engine = AsyncShuffleEngine(cfg, engine_cfg,
+                                         n_instances=n_instances,
+                                         store=store, seed=seed,
+                                         exactly_once=exactly_once)
+        # component views kept for introspection/back-compat
+        self.store = self.engine.store
+        self.caches = self.engine.caches
+        self.batchers = self.engine.batchers
+        self.debatchers = self.engine.debatchers
+        self.coordinators = self.engine.coordinators
+        self.notifications = self.engine.published
 
     def partition_to_az(self, partition: int) -> int:
-        return partition % self.cfg.num_az
+        return self.engine.partition_to_az(partition)
 
     def run(self, records: List[Record], *, now: float = 0.0,
             commit_every: Optional[int] = None,
@@ -71,28 +56,16 @@ class BlobShufflePipeline:
         right before the first commit (its uncommitted records replay —
         at-least-once upstream, exactly-once downstream via dedup).
         """
+        eng = self.engine
+        dt = 1e-6
         t = now
-        pending_replay: List[Record] = []
         for i, rec in enumerate(records):
-            inst = i % self.n_instances
-            self.coordinators[inst].process(rec, t)
-            t += 1e-6
+            eng.submit(t, rec, inst=i % self.n_instances)
             if commit_every and (i + 1) % commit_every == 0:
                 if fail_instance_before_commit is not None:
-                    replay = self.coordinators[
-                        fail_instance_before_commit].fail_and_restart(t)
-                    pending_replay.extend(replay)
+                    eng.fail_at(t + dt / 4, fail_instance_before_commit)
                     fail_instance_before_commit = None
-                for c in self.coordinators:
-                    t += c.commit(t)
-        for i, rec in enumerate(pending_replay):
-            self.coordinators[i % self.n_instances].process(rec, t)
-            t += 1e-6
-        for c in self.coordinators:
-            t += c.commit(t)
-        # read path: deliver notifications to the target AZ's debatcher
-        out: Dict[int, List[Record]] = defaultdict(list)
-        for note in self.notifications:
-            recs, _, _ = self.debatchers[note.target_az].process(note, t)
-            out[note.partition].extend(recs)
-        return dict(out)
+                eng.commit_at(t + dt / 2)
+            t += dt
+        eng.run()
+        return {p: list(rs) for p, rs in eng.out.items()}

@@ -20,11 +20,14 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from repro.core.analytical import ModelParams
+from repro.core.batcher import BlobShuffleConfig
 from repro.core.capacity import CapacityModel
 from repro.core.costs import (AwsPrices, CostBreakdown, actual_batch_frac,
                               blobshuffle_cost_per_hour,
                               kafka_shuffle_cost_per_hour)
+from repro.core.engine import AsyncShuffleEngine, EngineConfig
 from repro.core.store import LatencyModel, SimulatedS3, StoreCosts
+from repro.core.workload import WorkloadConfig, drive
 
 MiB = 1024 ** 2
 GiB = 1024 ** 3
@@ -78,6 +81,37 @@ class SimResult:
     @property
     def total_cost_at_1gib(self) -> float:
         return self.s3_cost_per_hour_at_1gib + self.infra_cost_per_hour_at_1gib
+
+
+def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
+                   = None, scale: float = 0.01, exactly_once: bool = False,
+                   key_skew: float = 0.5,
+                   latency: Optional[LatencyModel] = None
+                   ) -> "tuple[AsyncShuffleEngine, dict]":
+    """Measured (not modeled) run of a ``SimConfig`` workload through the
+    event-driven engine, scaled down by ``scale`` in offered rate and
+    batch size so the per-record simulation stays cheap. Returns the
+    engine (for store/cache stats) and its metrics summary — the async
+    counterpart of ``simulate``'s analytical percentiles.
+    """
+    bcfg = BlobShuffleConfig(
+        batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
+        max_interval_s=cfg.max_interval_s,
+        num_partitions=cfg.partitions, num_az=cfg.n_az,
+        cache_on_write=cfg.cache_on_write)
+    wl = WorkloadConfig(
+        arrival_rate=cfg.offered_gib_s * GiB * scale / cfg.record_bytes,
+        duration_s=min(cfg.duration_s, 10.0),
+        record_bytes=cfg.record_bytes, key_skew=key_skew, seed=cfg.seed)
+    store = SimulatedS3(latency=latency or LatencyModel(), seed=cfg.seed)
+    eng = AsyncShuffleEngine(
+        bcfg, engine_cfg or EngineConfig(
+            commit_interval_s=cfg.commit_interval_s),
+        n_instances=cfg.n_inst, store=store, seed=cfg.seed,
+        exactly_once=exactly_once)
+    drive(eng, wl)
+    metrics = eng.run()
+    return eng, metrics.summary(store)
 
 
 def simulate(cfg: SimConfig, capacity: Optional[CapacityModel] = None,

@@ -113,6 +113,36 @@ class SimulatedS3:
         self.stats.get_bytes += len(data)
         return data, self.latency.sample_get(len(data), self.rng)
 
+    # -- event-driven API (async engine path) ------------------------------
+    # The engine splits each operation into begin (sample latency, account
+    # the request) and finish (apply the state change at the completion
+    # event), so many PUTs/GETs can be in flight on the virtual clock.
+    def begin_put(self, size: int) -> float:
+        """Start an async PUT of ``size`` bytes; returns sampled latency.
+        The object becomes durable only at ``finish_put`` (the completion
+        event) — readers racing the upload must not observe it earlier."""
+        return self.latency.sample_put(size, self.rng)
+
+    def finish_put(self, blob_id: str, data: bytes, now: float) -> None:
+        """Apply a completed PUT: object is durable as of ``now``."""
+        self.objects[blob_id] = (data, now)
+        self.stats.puts += 1
+        self.stats.put_bytes += len(data)
+
+    def begin_get(self, blob_id: str) -> Tuple[int, float]:
+        """Start an async GET; returns (object size, sampled latency).
+        Request accounting happens at issue time, like the real S3 bill."""
+        if blob_id not in self.objects:
+            raise KeyError(f"no such object {blob_id} (expired or orphan?)")
+        size = len(self.objects[blob_id][0])
+        self.stats.gets += 1
+        self.stats.get_bytes += size
+        return size, self.latency.sample_get(size, self.rng)
+
+    def payload(self, blob_id: str) -> bytes:
+        """Raw object bytes (engine reads these at GET completion)."""
+        return self.objects[blob_id][0]
+
     def run_retention(self, now: float) -> int:
         """Delete objects older than the retention period (paper §3.2)."""
         dead = [k for k, (_, t) in self.objects.items()

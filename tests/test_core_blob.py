@@ -1,6 +1,8 @@
 """Blob format + record serialization: unit + property tests."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (ByteRange, Record, build_blob, deserialize,

@@ -1,6 +1,8 @@
 """Cache layers: LRU bound, single-flight, per-AZ ≤1 store GET invariant."""
 
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (DistributedCache, LocalCache, LRUCache,

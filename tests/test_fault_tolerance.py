@@ -16,6 +16,8 @@ from repro.runtime import FaultTolerantTrainer, HedgedFetcher
 from repro.training import OptConfig, TrainConfig, adamw_init, \
     make_train_step
 
+pytestmark = pytest.mark.slow   # full-model train/restore: slow in CI
+
 
 def make_setup(tmp_path, arch="granite-3-2b"):
     cfg = get_config(arch, smoke=True)

@@ -9,6 +9,8 @@ import pytest
 
 from repro.launch import hlo_analysis as H
 
+pytestmark = pytest.mark.slow   # XLA compile sweeps: deselected in CI
+
 
 def _compile(f, *abstract):
     return jax.jit(f).lower(*abstract).compile()

@@ -16,6 +16,8 @@ import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
+pytestmark = pytest.mark.slow   # subprocess multi-device: deselected in CI
+
 
 def run_py(body: str, devices: int = 8) -> str:
     code = ("import os\n"

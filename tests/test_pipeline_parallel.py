@@ -5,7 +5,11 @@ import subprocess
 import sys
 import textwrap
 
+import pytest
+
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+pytestmark = pytest.mark.slow   # subprocess multi-device: deselected in CI
 
 
 def test_gpipe_matches_sequential():
