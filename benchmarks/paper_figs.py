@@ -12,11 +12,8 @@ from typing import List, Tuple
 
 import numpy as np
 
-from repro.core import (CapacityModel, ModelParams, SimConfig,
-                        blobshuffle_cost_per_hour,
-                        kafka_shuffle_cost_per_hour, simulate)
+from repro.core import ModelParams, SimConfig, simulate
 from repro.core import analytical as A
-from repro.core.costs import actual_batch_frac
 
 MiB = 1024 ** 2
 GiB = 1024 ** 3

@@ -7,7 +7,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 
 
 def _dryrun_summary(out_dir="results/dryrun"):
@@ -32,14 +31,17 @@ def _dryrun_summary(out_dir="results/dryrun"):
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
-                    choices=["all", "paper", "async", "tpu", "kernels",
-                             "dryrun"])
+                    choices=["all", "paper", "async", "tiers", "tpu",
+                             "kernels", "dryrun"])
     args = ap.parse_args()
 
     rows = []
     if args.suite in ("all", "async"):
         from benchmarks import async_engine
         rows += async_engine.run()
+    if args.suite in ("all", "tiers"):
+        from benchmarks import tier_sweep
+        rows += tier_sweep.run()
     if args.suite in ("all", "paper"):
         from benchmarks import paper_figs as F
         rows += F.fig5_latency_cdf()

@@ -18,7 +18,6 @@ import sys        # noqa: E402
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 import jax                      # noqa: E402
-import jax.numpy as jnp         # noqa: E402
 
 from repro.configs import get_config                      # noqa: E402
 from repro.data import lm_batch_stream                    # noqa: E402

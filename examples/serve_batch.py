@@ -40,7 +40,6 @@ def main():
     prompts = jax.random.randint(jax.random.key(2), (B, args.prompt_len),
                                  0, cfg.vocab_size)
     # prefill via the decode path (teacher-forced) to fill the cache
-    tok = prompts[:, :1]
     for t in range(args.prompt_len):
         cache, nxt, _ = serve_step(params, cache,
                                    {"tokens": prompts[:, t:t + 1],

@@ -10,7 +10,6 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-import numpy as np
 
 from repro.core import (BlobShuffleConfig, BlobShufflePipeline, SimConfig,
                         simulate)

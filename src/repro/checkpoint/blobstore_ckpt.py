@@ -17,12 +17,11 @@ never a corrupt checkpoint. Restore trusts manifests only.
 
 from __future__ import annotations
 
-import io
 import json
 import os
 import threading
 import time
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, List, Optional
 
 import jax
 import numpy as np

@@ -6,7 +6,11 @@ from repro.core.records import (Record, serialize, deserialize,
                                 deserialize_all, default_partitioner)
 from repro.core.blob import (Blob, BlobIndex, ByteRange, Notification,
                              build_blob, extract)
-from repro.core.store import SimulatedS3, LatencyModel, StoreCosts
+from repro.core.stores import (BlobStore, SimulatedS3, LatencyModel,
+                               StoreCosts, StoreStats, StoreError,
+                               SlowDownError, TransientStoreError,
+                               StoreTimeoutError, ExpressOneZoneStore,
+                               FaultyStore, FaultStats)
 from repro.core.cache import (LRUCache, SingleFlight, DistributedCache,
                               LocalCache)
 from repro.core.batcher import Batcher, BlobShuffleConfig
@@ -19,7 +23,8 @@ from repro.core.workload import WorkloadConfig, drive, generate
 from repro.core.pipeline import BlobShufflePipeline
 from repro.core.analytical import ModelParams
 from repro.core.capacity import CapacityModel
-from repro.core.costs import (AwsPrices, blobshuffle_cost_per_hour,
+from repro.core.costs import (AwsPrices, TierPrices, TIERS,
+                              blobshuffle_cost_per_hour,
                               kafka_shuffle_cost_per_hour)
 from repro.core.simulator import (SimConfig, SimResult, simulate,
                                   simulate_async)

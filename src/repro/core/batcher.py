@@ -63,11 +63,18 @@ class Batcher:
                  cache: DistributedCache,
                  uploader: Optional[Callable[
                      [Blob, List[Notification], Dict[int, List[Record]],
-                      float], None]] = None):
+                      float], None]] = None,
+                 name: Optional[str] = None):
         self.cfg = cfg
         self.partition_to_az = partition_to_az
         self.partitioner = partitioner
         self.cache = cache
+        # When named, blob ids are "<name>-<seq>" instead of random uuids:
+        # deterministic across runs (bit-reproducible virtual-clock runs,
+        # stable per-prefix throttle buckets in FaultyStore) and prefixed
+        # per producer, mirroring S3 key-prefix layout.
+        self.name = name
+        self._blob_seq = 0
         # Event-driven hook: when set, finalized blobs are handed to
         # ``uploader(blob, notes, per_partition_records, now)`` instead of
         # being written synchronously — the async engine queues them on a
@@ -155,7 +162,11 @@ class Batcher:
         self.last_finalize[az] = now
         if not parts:
             return
-        blob, notes = build_blob(parts, target_az=az)
+        bid = None
+        if self.name is not None:
+            bid = f"{self.name}-{self._blob_seq:06d}"
+            self._blob_seq += 1
+        blob, notes = build_blob(parts, target_az=az, blob_id=bid)
         if self.uploader is not None:
             self.uploader(blob, notes, parts, now)
         else:

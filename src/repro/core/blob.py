@@ -10,7 +10,7 @@ from __future__ import annotations
 
 import dataclasses
 import uuid
-from typing import Dict, Iterable, List, Optional, Tuple
+from typing import Dict, List, Optional, Tuple
 
 from repro.core.records import Record, deserialize_all, serialize
 

@@ -15,8 +15,7 @@ import dataclasses
 from collections import OrderedDict
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.blob import ByteRange
-from repro.core.store import SimulatedS3
+from repro.core.stores import BlobStore, StoreError
 from repro.utils import stable_hash64
 
 
@@ -27,6 +26,7 @@ class CacheStats:
     coalesced: int = 0       # requests served by an in-flight download
     evictions: int = 0
     insertions: int = 0
+    store_gets: int = 0      # store GETs this cluster led (misses it filled)
 
     @property
     def requests(self) -> int:
@@ -94,7 +94,7 @@ class DistributedCache:
     the owner, which fetches from object storage at most once per entry."""
 
     def __init__(self, az: int, members: int, capacity_per_member: int,
-                 store: SimulatedS3, cache_on_write: bool = True):
+                 store: BlobStore, cache_on_write: bool = True):
         self.az = az
         self.members = [LRUCache(capacity_per_member)
                         for _ in range(members)]
@@ -102,14 +102,19 @@ class DistributedCache:
         self.store = store
         self.cache_on_write = cache_on_write
         self.stats = CacheStats()
-        self.store_gets = 0
+
+    @property
+    def store_gets(self) -> int:
+        """Store GETs led by this cluster (all counting routes through
+        ``stats.store_gets`` — never bumped ad hoc by callers)."""
+        return self.stats.store_gets
 
     def owner_of(self, blob_id: str) -> int:
         return stable_hash64(blob_id.encode()) % len(self.members)
 
     def write(self, blob_id: str, payload: bytes, now: float = 0.0) -> float:
         """Write path: member uploads to the store; optionally caches."""
-        lat = self.store.put(blob_id, payload, now)
+        lat = self.store.put(blob_id, payload, now, az=self.az)
         if self.cache_on_write:
             self.members[self.owner_of(blob_id)].put(blob_id, payload)
         return lat
@@ -137,6 +142,16 @@ class DistributedCache:
         """Insert into the owning member (write-through or GET completion)."""
         self.members[self.owner_of(blob_id)].put(blob_id, payload)
 
+    def begin_store_get(self, blob_id: str, now: float = 0.0
+                        ) -> Tuple[int, float]:
+        """Lead one store GET on behalf of this cluster (async engine
+        path): the single choke point for request accounting, so
+        ``store.stats.gets`` and ``stats.store_gets`` stay consistent.
+        Raises ``StoreError`` without counting if the request fails."""
+        size, lat = self.store.begin_get(blob_id, now=now, az=self.az)
+        self.stats.store_gets += 1
+        return size, lat
+
     def read(self, blob_id: str, now: float = 0.0) -> Tuple[bytes, float, str]:
         """Read path. Returns (payload, latency, source) where source is
         one of "cache" | "store" | "coalesced" (latency excludes queueing
@@ -147,16 +162,23 @@ class DistributedCache:
             self.stats.hits += 1
             return hit, 0.0005, "cache"  # intra-AZ RPC
         if not self.flight.begin(blob_id):
+            # single-flight invariant: a coalesced request rides the
+            # leader's download — served from the store's payload view,
+            # never issuing (or accounting) a second store GET
             self.stats.coalesced += 1
-            payload, _ = self.store.get(blob_id, now=now)
-            # NOTE: stats.gets was bumped by the probe; undo (coalesced
-            # requests must not hit the store — single-flight invariant)
-            self.store.stats.gets -= 1
-            self.store.stats.get_bytes -= len(payload)
+            payload = self.store.payload(blob_id)
             return payload, 0.0005, "coalesced"
         self.stats.misses += 1
-        payload, lat = self.store.get(blob_id, now=now)
-        self.store_gets += 1
+        try:
+            payload, lat = self.store.get(blob_id, now=now, az=self.az)
+        except (StoreError, KeyError):
+            # leader failed before filling (fault injection, or the
+            # object expired): release leadership so the retry — or the
+            # next reader — can lead a fresh download, and so a later
+            # success fills the member exactly once
+            self.flight.complete(blob_id, b"")
+            raise
+        self.stats.store_gets += 1
         member.put(blob_id, payload)
         self.flight.complete(blob_id, payload)
         return payload, lat, "store"

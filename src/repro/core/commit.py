@@ -14,7 +14,7 @@ never referenced) stay unreachable and are collected by retention.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional, Set, Tuple
+from typing import Callable, List, Optional, Set
 
 from repro.core.batcher import Batcher
 from repro.core.blob import Notification

@@ -10,10 +10,51 @@ All prices are AWS us-east-1 list prices as used in the paper (§5.1.4,
 from __future__ import annotations
 
 import dataclasses
+from typing import Dict
 
 from repro.core.analytical import ModelParams, get_rate, put_rate
+from repro.core.stores.base import StoreCosts
 
 GiB = 1024 ** 3
+
+
+@dataclasses.dataclass(frozen=True)
+class TierPrices:
+    """Per-tier object-storage pricing for the tier sweep.
+
+    ``standard`` matches the paper's S3 us-east-1 list prices; the
+    premium tiers are illustrative but directionally correct: lower
+    latency is bought with higher request and storage prices, and zonal
+    tiers additionally bill cross-AZ routing per GB.
+    """
+    name: str
+    put_per_1k: float
+    get_per_1k: float
+    storage_gb_month: float
+    cross_az_per_gb: float = 0.0
+    hours_per_month: float = 730.0
+
+    def store_costs(self) -> StoreCosts:
+        """The ``StoreCosts`` a ``BlobStore`` backend bills with."""
+        return StoreCosts(put_per_req=self.put_per_1k / 1000.0,
+                          get_per_req=self.get_per_1k / 1000.0,
+                          storage_per_gb_month=self.storage_gb_month,
+                          hours_per_month=self.hours_per_month,
+                          cross_az_per_gb=self.cross_az_per_gb)
+
+
+STANDARD = TierPrices("standard", put_per_1k=5.0e-3, get_per_1k=0.4e-3,
+                      storage_gb_month=0.023)
+EXPRESS_ONE_ZONE = TierPrices("express-one-zone", put_per_1k=1.0e-2,
+                              get_per_1k=0.8e-3, storage_gb_month=0.16,
+                              cross_az_per_gb=0.01)
+PREMIUM = TierPrices("premium-low-latency", put_per_1k=2.5e-2,
+                     get_per_1k=2.0e-3, storage_gb_month=0.30,
+                     cross_az_per_gb=0.01)
+
+TIERS: Dict[str, TierPrices] = {t.name: t
+                                for t in (STANDARD, EXPRESS_ONE_ZONE,
+                                          PREMIUM)}
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,7 +98,6 @@ def blobshuffle_cost_per_hour(p: ModelParams, *, retention_s: float = 3600.0,
     scale = 1.0 / max(actual_batch_frac, 1e-6)
     puts_h = put_rate(p) * scale * 3600.0
     gets_h = get_rate(p) * scale * 3600.0
-    bytes_h = p.rate * p.s_rec * 3600.0
     stored_gb = p.rate * p.s_rec * retention_s / 1e9
     return CostBreakdown(
         s3_put=puts_h / 1000.0 * prices.s3_put_per_1k,

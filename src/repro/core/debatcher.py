@@ -5,9 +5,9 @@ dedup on (blob_id, partition) and commit blocking on in-flight reads."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Set, Tuple
+from typing import List, Optional, Set, Tuple
 
-from repro.core.blob import ByteRange, Notification, extract
+from repro.core.blob import Notification, extract
 from repro.core.cache import DistributedCache, LocalCache
 from repro.core.records import Record
 

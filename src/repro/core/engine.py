@@ -22,8 +22,19 @@ actual concurrency structure (§3, §5):
     visible in commit batches (read-committed), so duplicate, reordered,
     or replayed work never double-delivers downstream.
 
+Both lanes are resilient against an unreliable ``BlobStore`` (e.g. a
+``FaultyStore``-wrapped tier): failed PUTs/GETs retry with exponential
+backoff + deterministic jitter (503 SlowDown responses additionally
+honor the server's retry-after hint and put the lane under a
+backpressure penalty that collapses its parallelism to 1); slow GETs can
+be hedged with a second request once the observed latency quantile is
+exceeded, first completion wins. A periodic retention sweep deletes
+expired blobs on the virtual clock, and end-of-run storage accrual folds
+still-live objects into ``StoreStats.byte_seconds``.
+
 Everything runs on the deterministic ``EventLoop`` in
-``repro.core.events`` — a fixed seed reproduces the exact event order.
+``repro.core.events`` — a fixed seed reproduces the exact event order,
+including every retry, backoff draw, and hedge.
 """
 
 from __future__ import annotations
@@ -41,14 +52,14 @@ from repro.core.commit import CommitCoordinator
 from repro.core.debatcher import Debatcher
 from repro.core.events import EventLoop
 from repro.core.records import Record, default_partitioner
-from repro.core.store import SimulatedS3
+from repro.core.stores import BlobStore, SimulatedS3, SlowDownError, StoreError
 
 GiB = 1024 ** 3
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
-    """Concurrency knobs of the async engine.
+    """Concurrency + resilience knobs of the async engine.
 
     ``upload_parallelism = fetch_parallelism = 1`` degenerates to the old
     synchronous single-in-flight execution — the baseline the paper's
@@ -61,6 +72,17 @@ class EngineConfig:
     cache_fill_latency_s: float = 0.001        # write-through fill delay
     rpc_latency_s: float = 0.0005              # intra-AZ cache RPC
     local_latency_s: float = 0.00005           # local-cache lookup
+    # -- retry / backoff (per failed PUT or GET attempt) -------------------
+    max_attempts: int = 8              # attempts before a request aborts
+    backoff_base_s: float = 0.05       # exponential: base × 2^(attempt-1)
+    backoff_max_s: float = 5.0
+    backoff_jitter: float = 0.5        # uniform [0, jitter] × backoff extra
+    throttle_penalty_s: float = 0.25   # lane parallelism → 1 after a 503
+    # -- hedged GETs --------------------------------------------------------
+    hedge_quantile: Optional[float] = None  # e.g. 95.0; None disables
+    hedge_min_samples: int = 20        # observed GETs before hedging arms
+    # -- retention ----------------------------------------------------------
+    retention_sweep_s: Optional[float] = None  # periodic expiry sweep
 
 
 @dataclasses.dataclass
@@ -77,13 +99,23 @@ class ShuffleMetrics:
     record_latencies: List[float] = dataclasses.field(default_factory=list)
     put_latencies: List[float] = dataclasses.field(default_factory=list)
     get_latencies: List[float] = dataclasses.field(default_factory=list)
+    # resilience counters
+    put_retries: int = 0
+    get_retries: int = 0
+    uploads_aborted: int = 0           # blobs dropped after max_attempts
+    fetches_aborted: int = 0
+    throttle_events: int = 0           # 503 SlowDown responses observed
+    hedges_issued: int = 0
+    hedges_won: int = 0                # hedge completed before the primary
+    retention_sweeps: int = 0
+    retention_deleted: int = 0
 
     def latency_p(self, q: float) -> float:
         if not self.record_latencies:
             return float("nan")
         return float(np.percentile(self.record_latencies, q))
 
-    def summary(self, store: SimulatedS3) -> Dict[str, float]:
+    def summary(self, store: BlobStore) -> Dict[str, float]:
         shuffled_gib = store.stats.put_bytes / GiB
         cost = store.stats.cost_usd(store.costs, store.retention_s)
         return {
@@ -103,6 +135,8 @@ class ShuffleMetrics:
 class _Fetch:
     note: Notification
     enqueued_at: float
+    attempt: int = 0
+    done: bool = False      # set by the first completion (primary or hedge)
 
 
 class AsyncShuffleEngine:
@@ -110,7 +144,7 @@ class AsyncShuffleEngine:
 
     def __init__(self, cfg: BlobShuffleConfig,
                  engine_cfg: Optional[EngineConfig] = None, *,
-                 n_instances: int = 3, store: Optional[SimulatedS3] = None,
+                 n_instances: int = 3, store: Optional[BlobStore] = None,
                  seed: int = 0, exactly_once: bool = True):
         self.cfg = cfg
         self.ecfg = engine_cfg or EngineConfig()
@@ -138,13 +172,15 @@ class AsyncShuffleEngine:
             b = Batcher(cfg, self.partition_to_az,
                         lambda key: default_partitioner(
                             key, cfg.num_partitions),
-                        self.caches[az], uploader=self._make_uploader(i))
+                        self.caches[az], uploader=self._make_uploader(i),
+                        name=f"i{i}")
             self.batchers.append(b)
             self.coordinators.append(
                 CommitCoordinator(b, self.debatchers, self._publish))
 
         # producer side: per-instance bounded upload lanes
-        self._upload_q: List[Deque[Tuple[Blob, List[Notification]]]] = \
+        # queue entries are (blob, notes, attempt)
+        self._upload_q: List[Deque[Tuple[Blob, List[Notification], int]]] = \
             [deque() for _ in range(n_instances)]
         self._uploads_inflight = [0] * n_instances
         self._epoch = [0] * n_instances    # bumped on failure injection
@@ -152,7 +188,17 @@ class AsyncShuffleEngine:
         self._fetch_q: List[Deque[_Fetch]] = [deque()
                                               for _ in range(cfg.num_az)]
         self._fetch_inflight = [0] * cfg.num_az
-        self._get_inflight: Dict[Tuple[int, str], float] = {}
+        # (az, blob_id) -> waiters parked behind the leading GET; key
+        # presence marks a leader in flight (kept across leader retries)
+        self._get_waiters: Dict[Tuple[int, str], List[_Fetch]] = {}
+        # throttle backpressure: lane parallelism collapses to 1 until t
+        self._upload_penalty = [0.0] * n_instances
+        self._fetch_penalty = [0.0] * cfg.num_az
+        # deterministic jitter for retry backoff (separate stream from the
+        # store's latency RNG so adding retries never perturbs latencies)
+        self._retry_rng = np.random.default_rng(
+            np.random.SeedSequence([seed, 0x5E7]))
+        self._hedge_cached: Optional[Tuple[int, float]] = None
         # source arrival bookkeeping for end-to-end latency
         self._arrivals: Dict[Tuple[int, int], Deque[float]] = \
             defaultdict(deque)
@@ -211,6 +257,26 @@ class AsyncShuffleEngine:
             self._flush_timers.add((i, az))
             self.loop.at(due + 1e-9, self._flush_check, i, az)
 
+    # -- retry/backoff helpers --------------------------------------------
+    def _backoff(self, attempt: int, err: StoreError) -> float:
+        """Exponential backoff with deterministic jitter; 503 responses
+        additionally honor the server's retry-after hint."""
+        base = min(self.ecfg.backoff_max_s,
+                   self.ecfg.backoff_base_s * 2.0 ** max(attempt - 1, 0))
+        jit = base * self.ecfg.backoff_jitter * float(self._retry_rng.random())
+        return max(base + jit, err.retry_after_s)
+
+    def _note_throttle(self, penalties: List[float], lane: int,
+                       err: StoreError) -> None:
+        if isinstance(err, SlowDownError):
+            self.metrics.throttle_events += 1
+            penalties[lane] = max(penalties[lane],
+                                  self.loop.now + self.ecfg.throttle_penalty_s)
+
+    def _lane_cap(self, penalties: List[float], lane: int,
+                  cap: int) -> int:
+        return 1 if self.loop.now < penalties[lane] else max(1, cap)
+
     # -- upload lane ------------------------------------------------------
     def _make_uploader(self, i: int) -> Callable:
         def uploader(blob: Blob, notes: List[Notification],
@@ -221,25 +287,69 @@ class AsyncShuffleEngine:
                 self._blob_arrivals[(blob.blob_id, part)] = \
                     [q.popleft() for _ in range(n)]
             self.coordinators[i].note_upload_started(blob.blob_id)
-            self._upload_q[i].append((blob, notes))
+            self._upload_q[i].append((blob, notes, 0))
             self._pump_uploads(i)
         return uploader
 
     def _pump_uploads(self, i: int) -> None:
-        cap = max(1, self.ecfg.upload_parallelism)
+        cap = self._lane_cap(self._upload_penalty, i,
+                             self.ecfg.upload_parallelism)
         while self._uploads_inflight[i] < cap and self._upload_q[i]:
-            blob, notes = self._upload_q[i].popleft()
+            blob, notes, attempt = self._upload_q[i].popleft()
             self._uploads_inflight[i] += 1
-            lat = self.store.begin_put(blob.size)
-            self.loop.after(lat, self._upload_done, i, blob, notes, lat,
-                            self._epoch[i])
+            self._start_put(i, blob, notes, attempt)
+
+    def _start_put(self, i: int, blob: Blob, notes: List[Notification],
+                   attempt: int) -> None:
+        az = i % self.cfg.num_az
+        try:
+            lat = self.store.begin_put(blob.blob_id, blob.size,
+                                       now=self.loop.now, az=az)
+        except StoreError as e:
+            self._note_throttle(self._upload_penalty, i, e)
+            delay = self._backoff(attempt + 1, e)
+            self.loop.after(e.detect_after_s, self._upload_failed, i, blob,
+                            notes, attempt, delay, self._epoch[i])
+            return
+        self.loop.after(lat, self._upload_done, i, blob, notes, lat,
+                        self._epoch[i])
+
+    def _upload_failed(self, i: int, blob: Blob, notes: List[Notification],
+                       attempt: int, delay: float, epoch: int) -> None:
+        """Failure observed: release the lane slot and either requeue the
+        blob after backoff or abort it past ``max_attempts``."""
+        if epoch != self._epoch[i]:
+            return
+        self._uploads_inflight[i] -= 1
+        if attempt + 1 >= self.ecfg.max_attempts:
+            # persistent failure: drop the blob so commits don't hang (the
+            # loss is visible in uploads_aborted and records_delivered)
+            self.metrics.uploads_aborted += 1
+            c = self.coordinators[i]
+            c.outstanding.discard(blob.blob_id)
+            if c.try_finish_commit(self.loop.now):
+                self._t_done = max(self._t_done, self.loop.now)
+        else:
+            self.metrics.put_retries += 1
+            self.loop.after(delay, self._requeue_upload, i, blob, notes,
+                            attempt + 1, epoch)
+        self._pump_uploads(i)
+
+    def _requeue_upload(self, i: int, blob: Blob,
+                        notes: List[Notification], attempt: int,
+                        epoch: int) -> None:
+        if epoch != self._epoch[i]:
+            return
+        self._upload_q[i].appendleft((blob, notes, attempt))
+        self._pump_uploads(i)
 
     def _upload_done(self, i: int, blob: Blob, notes: List[Notification],
                      lat: float, epoch: int) -> None:
         if epoch != self._epoch[i]:
             return  # instance crashed mid-upload: connection died with it
         now = self.loop.now
-        self.store.finish_put(blob.blob_id, blob.payload, now)
+        self.store.finish_put(blob.blob_id, blob.payload, now,
+                              az=i % self.cfg.num_az)
         self.metrics.put_latencies.append(lat)
         self._uploads_inflight[i] -= 1
         if self.cfg.cache_on_write:
@@ -270,7 +380,8 @@ class AsyncShuffleEngine:
         self._pump_fetches(az)
 
     def _pump_fetches(self, az: int) -> None:
-        cap = max(1, self.ecfg.fetch_parallelism)
+        cap = self._lane_cap(self._fetch_penalty, az,
+                             self.ecfg.fetch_parallelism)
         while self._fetch_inflight[az] < cap and self._fetch_q[az]:
             f = self._fetch_q[az].popleft()
             self._fetch_inflight[az] += 1
@@ -292,32 +403,123 @@ class AsyncShuffleEngine:
                             self._fetch_done, az, f, hit, "cache")
             return
         key = (az, blob_id)
-        leader_done = self._get_inflight.get(key)
-        if leader_done is not None:
-            # single-flight: ride the in-flight download, complete just
-            # after the leader does
+        waiters = self._get_waiters.get(key)
+        if waiters is not None:
+            # single-flight: park behind the in-flight leader (the slot
+            # stays held) and complete when the leader's download lands —
+            # robust to the leader retrying or aborting in between
             cache.note_miss(coalesced=True)
-            delay = max(0.0, leader_done - self.loop.now) \
-                + self.ecfg.rpc_latency_s
-            self.loop.after(delay, self._coalesced_done, az, f)
+            waiters.append(f)
             return
         cache.note_miss(coalesced=False)
-        cache.store_gets += 1
-        _, lat = self.store.begin_get(blob_id)
+        self._get_waiters[key] = []
+        self._lead_get(az, f)
+
+    def _lead_get(self, az: int, f: _Fetch) -> None:
+        """Issue (or re-issue after a failure) the leading store GET."""
+        try:
+            _, lat = self.caches[az].begin_store_get(f.note.blob_id,
+                                                     now=self.loop.now)
+        except StoreError as e:
+            self._note_throttle(self._fetch_penalty, az, e)
+            delay = self._backoff(f.attempt + 1, e)
+            self.loop.after(e.detect_after_s, self._get_failed, az, f,
+                            delay)
+            return
+        except KeyError:
+            # blob expired (retention) or was never durable: permanent
+            # miss — retrying cannot help, abort the whole flight
+            self._abort_flight(az, f)
+            return
         self.metrics.get_latencies.append(lat)
-        self._get_inflight[key] = self.loop.now + lat
+        done = self.loop.now + lat
         self.loop.after(lat, self._store_get_done, az, f)
+        hedge_at = self._hedge_threshold()
+        if hedge_at is not None and lat > hedge_at:
+            self.loop.after(hedge_at, self._hedge_fire, az, f, done)
+
+    def _hedge_threshold(self) -> Optional[float]:
+        q = self.ecfg.hedge_quantile
+        n = len(self.metrics.get_latencies)
+        if q is None or n < self.ecfg.hedge_min_samples:
+            return None
+        # refresh every 32 samples: O(n log n) per refresh instead of a
+        # full percentile pass on every issued GET
+        bucket = n // 32
+        if self._hedge_cached is None or self._hedge_cached[0] != bucket:
+            self._hedge_cached = (
+                bucket, float(np.percentile(self.metrics.get_latencies, q)))
+        return self._hedge_cached[1]
+
+    def _hedge_fire(self, az: int, f: _Fetch, primary_done: float) -> None:
+        """The primary GET exceeded the hedge quantile: race a second
+        request against it; the first completion wins (``f.done``)."""
+        if f.done:
+            return
+        self.metrics.hedges_issued += 1
+        try:
+            _, lat = self.caches[az].begin_store_get(f.note.blob_id,
+                                                     now=self.loop.now)
+        except (StoreError, KeyError):
+            return      # hedge hit a fault: the primary is still running
+        self.metrics.get_latencies.append(lat)
+        if self.loop.now + lat < primary_done:
+            self.metrics.hedges_won += 1
+            self.loop.after(lat, self._store_get_done, az, f)
+
+    def _abort_flight(self, az: int, f: _Fetch) -> None:
+        """Permanently fail a leader fetch and every parked waiter (the
+        object is gone — expired before delivery): release their lane
+        slots and surface the loss in ``fetches_aborted``."""
+        f.done = True
+        waiters = self._get_waiters.pop((az, f.note.blob_id), [])
+        self.metrics.fetches_aborted += 1 + len(waiters)
+        self._fetch_inflight[az] -= 1 + len(waiters)
+        self._pump_fetches(az)
+
+    def _get_failed(self, az: int, f: _Fetch, delay: float) -> None:
+        """Leader GET failure observed: back off and retry, or abort past
+        ``max_attempts`` (promoting a parked waiter to leader)."""
+        if f.done:
+            return      # a hedge completed the fetch meanwhile
+        f.attempt += 1
+        if f.attempt >= self.ecfg.max_attempts:
+            f.done = True
+            self.metrics.fetches_aborted += 1
+            key = (az, f.note.blob_id)
+            waiters = self._get_waiters.pop(key, [])
+            self._fetch_inflight[az] -= 1
+            if waiters:
+                leader, rest = waiters[0], waiters[1:]
+                self._get_waiters[key] = rest
+                self._lead_get(az, leader)
+            self._pump_fetches(az)
+            return
+        self.metrics.get_retries += 1
+        self.loop.after(delay, self._retry_get, az, f)
+
+    def _retry_get(self, az: int, f: _Fetch) -> None:
+        if f.done:
+            return
+        self._lead_get(az, f)
 
     def _store_get_done(self, az: int, f: _Fetch) -> None:
+        if f.done:
+            return      # the other of primary/hedge completed it first
         blob_id = f.note.blob_id
-        payload = self.store.payload(blob_id)
+        try:
+            payload = self.store.payload(blob_id)
+        except KeyError:
+            # expired between GET issue and completion: permanent loss
+            self._abort_flight(az, f)
+            return
+        f.done = True
         self.caches[az].fill(blob_id, payload)
-        self._get_inflight.pop((az, blob_id), None)
+        waiters = self._get_waiters.pop((az, blob_id), [])
+        for w in waiters:
+            self.loop.after(self.ecfg.rpc_latency_s, self._fetch_done,
+                            az, w, payload, "coalesced")
         self._fetch_done(az, f, payload, "store")
-
-    def _coalesced_done(self, az: int, f: _Fetch) -> None:
-        self._fetch_done(az, f, self.store.payload(f.note.blob_id),
-                         "coalesced")
 
     def _fetch_done(self, az: int, f: _Fetch, payload: bytes,
                     src: str) -> None:
@@ -361,6 +563,25 @@ class AsyncShuffleEngine:
                 or any(b.buffered_bytes() for b in self.batchers)):
             self.loop.after(interval, self._commit_tick, interval)
 
+    # -- retention ---------------------------------------------------------
+    def _work_pending(self) -> bool:
+        return (self._pending_ingests > 0
+                or any(self._uploads_inflight)
+                or any(self._upload_q)
+                or any(self._fetch_inflight)
+                or any(self._fetch_q)
+                or any(b.buffered_bytes() for b in self.batchers))
+
+    def _retention_tick(self, interval: float) -> None:
+        """Periodic expiry sweep (paper §3.2): deletes blobs past the
+        retention period and accrues their byte·seconds; reschedules
+        itself while shuffle work is still in flight."""
+        self.metrics.retention_sweeps += 1
+        self.metrics.retention_deleted += \
+            self.store.run_retention(self.loop.now)
+        if self._work_pending():
+            self.loop.after(interval, self._retention_tick, interval)
+
     def fail_at(self, t: float, inst: int) -> None:
         """Inject a crash of ``inst`` at time ``t``: queued/in-flight
         uploads and buffers are lost, uncommitted records replay."""
@@ -385,6 +606,13 @@ class AsyncShuffleEngine:
         ci = self.ecfg.commit_interval_s
         if ci:
             self.loop.after(ci, self._commit_tick, ci)
+        rs = self.ecfg.retention_sweep_s
+        if rs:
+            self.loop.after(rs, self._retention_tick, rs)
         self.loop.run(until)
+        # storage-cost correctness: fold still-live objects into the
+        # byte·seconds integral so cost_usd(explicit_storage=True) is
+        # exact even when nothing expired within the run
+        self.store.accrue_storage(self.loop.now)
         self.metrics.makespan_s = self._t_done
         return self.metrics

@@ -21,12 +21,12 @@ from typing import Dict, List, Optional
 from repro.core.batcher import BlobShuffleConfig
 from repro.core.engine import AsyncShuffleEngine, EngineConfig
 from repro.core.records import Record
-from repro.core.store import SimulatedS3
+from repro.core.stores import BlobStore
 
 
 class BlobShufflePipeline:
     def __init__(self, cfg: BlobShuffleConfig, *, n_instances: int = 3,
-                 store: Optional[SimulatedS3] = None, seed: int = 0,
+                 store: Optional[BlobStore] = None, seed: int = 0,
                  exactly_once: bool = True,
                  engine_cfg: Optional[EngineConfig] = None):
         self.cfg = cfg

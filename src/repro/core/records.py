@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 import struct
-from typing import Dict, List, Optional, Tuple
+from typing import List, Tuple
 
 _HDR = struct.Struct("<IIQH")  # key_len, value_len, timestamp_us, n_headers
 

@@ -13,20 +13,20 @@ offered load above capacity, processed rate = capacity).
 from __future__ import annotations
 
 import dataclasses
-import heapq
 import math
-from typing import Dict, List, Optional, Tuple
+from typing import List, Optional
 
 import numpy as np
 
 from repro.core.analytical import ModelParams
 from repro.core.batcher import BlobShuffleConfig
 from repro.core.capacity import CapacityModel
-from repro.core.costs import (AwsPrices, CostBreakdown, actual_batch_frac,
+from repro.core.costs import (AwsPrices,
+                              actual_batch_frac,
                               blobshuffle_cost_per_hour,
                               kafka_shuffle_cost_per_hour)
 from repro.core.engine import AsyncShuffleEngine, EngineConfig
-from repro.core.store import LatencyModel, SimulatedS3, StoreCosts
+from repro.core.stores import BlobStore, LatencyModel, SimulatedS3
 from repro.core.workload import WorkloadConfig, drive
 
 MiB = 1024 ** 2
@@ -86,13 +86,18 @@ class SimResult:
 def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
                    = None, scale: float = 0.01, exactly_once: bool = False,
                    key_skew: float = 0.5,
-                   latency: Optional[LatencyModel] = None
+                   latency: Optional[LatencyModel] = None,
+                   store: Optional[BlobStore] = None
                    ) -> "tuple[AsyncShuffleEngine, dict]":
     """Measured (not modeled) run of a ``SimConfig`` workload through the
     event-driven engine, scaled down by ``scale`` in offered rate and
     batch size so the per-record simulation stays cheap. Returns the
     engine (for store/cache stats) and its metrics summary — the async
     counterpart of ``simulate``'s analytical percentiles.
+
+    ``store`` swaps the storage backend (any ``BlobStore``: another
+    tier, or a ``FaultyStore``-wrapped one for degraded-store runs);
+    default is ``SimulatedS3`` with the calibrated ``latency`` model.
     """
     bcfg = BlobShuffleConfig(
         batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
@@ -103,7 +108,9 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
         arrival_rate=cfg.offered_gib_s * GiB * scale / cfg.record_bytes,
         duration_s=min(cfg.duration_s, 10.0),
         record_bytes=cfg.record_bytes, key_skew=key_skew, seed=cfg.seed)
-    store = SimulatedS3(latency=latency or LatencyModel(), seed=cfg.seed)
+    if store is None:
+        store = SimulatedS3(latency=latency or LatencyModel(),
+                            seed=cfg.seed)
     eng = AsyncShuffleEngine(
         bcfg, engine_cfg or EngineConfig(
             commit_interval_s=cfg.commit_interval_s),
@@ -128,7 +135,6 @@ def simulate(cfg: SimConfig, capacity: Optional[CapacityModel] = None,
     fill_rate_per_az = b_inst / cfg.n_az            # bytes/s per AZ buffer
 
     # --- blob-level event simulation -----------------------------------
-    store = SimulatedS3(latency=lat, seed=cfg.seed)
     t_end = cfg.duration_s
     shuffle_lat: List[float] = []
     put_lat: List[float] = []

@@ -1,156 +1,18 @@
-"""Object storage layer: interface + simulated S3 (latency, cost, retention).
+"""Back-compat shim: the storage layer now lives in ``repro.core.stores``.
 
-The latency model is calibrated to the paper's Fig. 5 (16 MiB objects,
-us-east-1): long-tailed lognormal with size-dependent medians, PUT ≈ 7–9×
-slower than GET, p95 ≈ 2.2× median. The cost model uses AWS list prices.
-The store is append-only and garbage-tolerant: orphaned blobs are removed
-by retention, never by readers (paper §3.1/§3.2).
+Kept so historical imports (``from repro.core.store import SimulatedS3``)
+keep working; new code should import from ``repro.core.stores``.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import math
-from typing import Callable, Dict, List, Optional, Tuple
+from repro.core.stores import (BlobStore, LatencyModel, SimulatedS3,
+                               SlowDownError, StoreCosts, StoreError,
+                               StoreStats, StoreTimeoutError,
+                               TransientStoreError)
 
-import numpy as np
-
-from repro.core.blob import Blob, ByteRange
-
-MiB = 1024 ** 2
-
-
-@dataclasses.dataclass
-class StoreCosts:
-    """AWS S3 us-east-1 list prices (paper §5.1.4)."""
-    put_per_req: float = 0.005 / 1000
-    get_per_req: float = 0.0004 / 1000
-    storage_per_gb_month: float = 0.023
-    hours_per_month: float = 730.0
-
-    def storage_cost_per_gb_hour(self) -> float:
-        return self.storage_per_gb_month / self.hours_per_month
-
-
-@dataclasses.dataclass
-class LatencyModel:
-    """T = lognormal(median = t0 + size/bw, sigma). Long-tail per Fig. 5."""
-    put_t0_s: float = 0.200
-    put_bw: float = 40 * MiB      # bytes/s transfer component of PUT
-    get_t0_s: float = 0.030
-    get_bw: float = 350 * MiB
-    sigma: float = 0.42           # p95 ≈ 2.0× median, p99 ≈ 2.7× median
-
-    def put_median(self, size: int) -> float:
-        return self.put_t0_s + size / self.put_bw
-
-    def get_median(self, size: int) -> float:
-        return self.get_t0_s + size / self.get_bw
-
-    def sample_put(self, size: int, rng: np.random.Generator) -> float:
-        return float(self.put_median(size) *
-                     np.exp(self.sigma * rng.standard_normal()))
-
-    def sample_get(self, size: int, rng: np.random.Generator) -> float:
-        return float(self.get_median(size) *
-                     np.exp(self.sigma * rng.standard_normal()))
-
-
-@dataclasses.dataclass
-class StoreStats:
-    puts: int = 0
-    gets: int = 0
-    put_bytes: int = 0
-    get_bytes: int = 0
-    byte_seconds: float = 0.0     # integral of stored bytes over time
-
-    def cost_usd(self, costs: StoreCosts, retention_s: float = 0.0,
-                 explicit_storage: bool = False) -> float:
-        """Request costs + storage (byte·s integral, or puts×retention)."""
-        c = self.puts * costs.put_per_req + self.gets * costs.get_per_req
-        if explicit_storage:
-            gb_h = self.byte_seconds / 1e9 / 3600.0
-        else:
-            gb_h = self.put_bytes * retention_s / 1e9 / 3600.0
-        return c + gb_h * costs.storage_per_gb_month / costs.hours_per_month
-
-
-class SimulatedS3:
-    """In-memory object store with simulated latency + cost accounting.
-
-    Used both by the functional (unit-test) path — where operations are
-    synchronous and latency is just *reported* — and by the discrete-event
-    simulator, which schedules completions at ``now + sampled latency``.
-    """
-
-    def __init__(self, latency: Optional[LatencyModel] = None,
-                 costs: Optional[StoreCosts] = None, seed: int = 0,
-                 retention_s: float = 3600.0):
-        self.latency = latency or LatencyModel()
-        self.costs = costs or StoreCosts()
-        self.rng = np.random.default_rng(seed)
-        self.retention_s = retention_s
-        self.objects: Dict[str, Tuple[bytes, float]] = {}  # id -> (data, t)
-        self.stats = StoreStats()
-
-    # -- synchronous API (functional path) --------------------------------
-    def put(self, blob_id: str, data: bytes, now: float = 0.0) -> float:
-        """Store object; returns sampled completion latency (seconds)."""
-        self.objects[blob_id] = (data, now)
-        self.stats.puts += 1
-        self.stats.put_bytes += len(data)
-        return self.latency.sample_put(len(data), self.rng)
-
-    def get(self, blob_id: str, byte_range: Optional[ByteRange] = None,
-            now: float = 0.0) -> Tuple[bytes, float]:
-        """Fetch object (or ranged sub-object); returns (data, latency)."""
-        if blob_id not in self.objects:
-            raise KeyError(f"no such object {blob_id} (expired or orphan?)")
-        data, _ = self.objects[blob_id]
-        if byte_range is not None:
-            data = data[byte_range.offset:byte_range.end]
-        self.stats.gets += 1
-        self.stats.get_bytes += len(data)
-        return data, self.latency.sample_get(len(data), self.rng)
-
-    # -- event-driven API (async engine path) ------------------------------
-    # The engine splits each operation into begin (sample latency, account
-    # the request) and finish (apply the state change at the completion
-    # event), so many PUTs/GETs can be in flight on the virtual clock.
-    def begin_put(self, size: int) -> float:
-        """Start an async PUT of ``size`` bytes; returns sampled latency.
-        The object becomes durable only at ``finish_put`` (the completion
-        event) — readers racing the upload must not observe it earlier."""
-        return self.latency.sample_put(size, self.rng)
-
-    def finish_put(self, blob_id: str, data: bytes, now: float) -> None:
-        """Apply a completed PUT: object is durable as of ``now``."""
-        self.objects[blob_id] = (data, now)
-        self.stats.puts += 1
-        self.stats.put_bytes += len(data)
-
-    def begin_get(self, blob_id: str) -> Tuple[int, float]:
-        """Start an async GET; returns (object size, sampled latency).
-        Request accounting happens at issue time, like the real S3 bill."""
-        if blob_id not in self.objects:
-            raise KeyError(f"no such object {blob_id} (expired or orphan?)")
-        size = len(self.objects[blob_id][0])
-        self.stats.gets += 1
-        self.stats.get_bytes += size
-        return size, self.latency.sample_get(size, self.rng)
-
-    def payload(self, blob_id: str) -> bytes:
-        """Raw object bytes (engine reads these at GET completion)."""
-        return self.objects[blob_id][0]
-
-    def run_retention(self, now: float) -> int:
-        """Delete objects older than the retention period (paper §3.2)."""
-        dead = [k for k, (_, t) in self.objects.items()
-                if now - t > self.retention_s]
-        for k in dead:
-            data, t = self.objects.pop(k)
-            self.stats.byte_seconds += len(data) * (now - t)
-        return len(dead)
-
-    def contains(self, blob_id: str) -> bool:
-        return blob_id in self.objects
+__all__ = [
+    "BlobStore", "LatencyModel", "SimulatedS3", "SlowDownError",
+    "StoreCosts", "StoreError", "StoreStats", "StoreTimeoutError",
+    "TransientStoreError",
+]

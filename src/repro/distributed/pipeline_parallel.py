@@ -18,7 +18,6 @@ Equivalence to the sequential stack is tested on 8 host devices
 
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
 import jax

@@ -15,8 +15,7 @@ deepseek (EP) and the decode cells (batch=1) without per-arch sharding code.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P

@@ -20,8 +20,6 @@ import jax.numpy as jnp
 
 def blob_pack_ref(x: jax.Array, order: jax.Array, starts: jax.Array,
                   counts: jax.Array, *, capacity: int) -> jax.Array:
-    bins = starts.shape[0]
-    d = x.shape[-1]
     r = jnp.arange(capacity)
     # unit position in sorted order for (bin b, row r): starts[b] + r
     pos = starts[:, None] + r[None, :]                      # (bins, cap)

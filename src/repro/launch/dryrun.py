@@ -8,7 +8,6 @@ os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
 
 import argparse      # noqa: E402
 import dataclasses   # noqa: E402
-import gc            # noqa: E402
 import json          # noqa: E402
 import subprocess    # noqa: E402
 import sys           # noqa: E402
@@ -268,8 +267,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
         import repro.models.lm as _lm
         import repro.models.mla as _mla
         _orig = _mla.mla_decode
-        _mla_decode_abs = lambda c, p, x, cache, pos: _orig(
-            c, p, x, cache, pos, absorb=True)
+
+        def _mla_decode_abs(c, p, x, cache, pos):
+            return _orig(c, p, x, cache, pos, absorb=True)
         _lm_attn = _lm._attn_decode
 
         def _patched(c, p, x, cache, pos):
@@ -382,7 +382,6 @@ def main():
 
     if args.all:
         # one subprocess per cell: isolation + incremental (skip existing)
-        meshes = [args.mesh] if args.mesh else ["single", "multi"]
         failures = []
         for arch, shp in all_cells():
             out = _cell_path(args.out, args.mesh, arch, shp, args.tag)

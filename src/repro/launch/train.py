@@ -8,8 +8,6 @@ multi-pod distribution config itself is proven by ``repro.launch.dryrun``.
 from __future__ import annotations
 
 import argparse
-import os
-import sys
 import time
 
 

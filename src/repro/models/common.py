@@ -17,7 +17,6 @@ from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 PyTree = Any
 

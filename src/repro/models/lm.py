@@ -12,9 +12,7 @@ Public surface:
 
 from __future__ import annotations
 
-import dataclasses
-from functools import partial
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -10,12 +10,11 @@ Two decode paths:
 from __future__ import annotations
 
 import math
-from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ArraySpec, MLAConfig, ModelConfig
+from repro.models.common import ArraySpec, ModelConfig
 from repro.models.layers import rms_norm
 from repro.models.rope import apply_rope
 from repro.models.attention import dense_attention, attention_op

@@ -3,7 +3,7 @@ analogue: never shuffled) + routed experts dispatched via repro.shuffle."""
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

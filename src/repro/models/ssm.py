@@ -9,12 +9,11 @@ used only in tests.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.models.common import ArraySpec, ModelConfig, SSMConfig
+from repro.models.common import ArraySpec, ModelConfig
 from repro.models.layers import rms_norm
 
 

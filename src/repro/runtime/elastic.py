@@ -10,12 +10,10 @@ rescales per-host batch = global_batch / new_dp. Used by
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Dict
 
-import jax
 
 from repro.distributed.sharding import ShardingRules, named_shardings
-from repro.models.common import abstract_params
 
 
 def elastic_restore_plan(defs, rules: ShardingRules, new_mesh

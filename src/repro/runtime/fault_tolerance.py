@@ -9,10 +9,8 @@ is step-keyed (deterministic record generation per step).
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Callable, Dict, Optional
 
-import jax
-import numpy as np
 
 from repro.checkpoint import BlobCheckpointer, FileStore, latest_step
 

@@ -26,13 +26,15 @@ counts) so overflow/load diagnostics are exact.
 from __future__ import annotations
 
 import math
-from typing import Callable, NamedTuple, Optional, Sequence
+from typing import Callable, NamedTuple, Sequence
 
 import jax
 import jax.numpy as jnp
 
-from repro.shuffle.binning import (Packing, bin_pack, dropped_units,
-                                   gather_from_bins, scatter_to_bins)
+from repro.shuffle.binning import (bin_pack,
+                                   dropped_units,
+                                   gather_from_bins,
+                                   scatter_to_bins)
 from repro.shuffle import compression
 
 
@@ -116,7 +118,6 @@ def _flat_dcn_bytes(send: jax.Array, ep_axes: Sequence[str]) -> jax.Array:
     """Bytes of the flat a2a payload that cross the pod boundary."""
     if "pod" not in ep_axes:
         return jnp.zeros((), jnp.float32)
-    ep = send.shape[0]
     npods = jax.lax.psum(1, "pod")
     frac_cross = (npods - 1) / npods
     per_dev = send.size * jnp.dtype(send.dtype).itemsize * frac_cross

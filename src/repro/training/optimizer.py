@@ -37,7 +37,8 @@ def schedule(cfg: OptConfig, step: jax.Array) -> jax.Array:
 
 
 def adamw_init(params: PyTree) -> dict:
-    zeros = lambda p: jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
+    def zeros(p):
+        return jax.tree.map(lambda x: jnp.zeros_like(x, jnp.float32), p)
     return {"m": zeros(params), "v": zeros(params),
             "count": jnp.zeros((), jnp.int32)}
 

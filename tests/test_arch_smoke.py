@@ -1,7 +1,6 @@
 """Per-architecture smoke tests: reduced config of the same family, one
 forward / train / decode step on CPU, asserting shapes + no NaNs."""
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -5,8 +5,12 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
-from repro.core import (ByteRange, Record, build_blob, deserialize,
-                        deserialize_all, extract, serialize,
+from repro.core import (Record,
+                        build_blob,
+                        deserialize,
+                        deserialize_all,
+                        extract,
+                        serialize,
                         default_partitioner)
 
 rec_st = st.builds(

@@ -1,24 +1,28 @@
-"""Cache layers: LRU bound, single-flight, per-AZ ≤1 store GET invariant."""
+"""Cache layers: LRU bound, single-flight, per-AZ ≤1 store GET invariant,
+eviction under byte pressure, and leader-failure behavior on a faulty
+store."""
 
 import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
-
-from repro.core import (DistributedCache, LocalCache, LRUCache,
-                        SimulatedS3, SingleFlight)
+from repro.core import (DistributedCache, FaultyStore, LocalCache, LRUCache,
+                        SimulatedS3, SingleFlight, TransientStoreError)
 
 
-@settings(deadline=None)
-@given(st.lists(st.tuples(st.text(min_size=1, max_size=4),
-                          st.integers(1, 64)), max_size=60),
-       st.integers(16, 128))
-def test_lru_never_exceeds_capacity(ops, capacity):
-    lru = LRUCache(capacity)
-    for key, size in ops:
-        lru.put(key, b"x" * size)
-        assert lru.size <= capacity
-        assert lru.size == sum(len(v) for v in lru.entries.values())
+try:
+    from hypothesis import given, settings, strategies as st
+
+    @settings(deadline=None)
+    @given(st.lists(st.tuples(st.text(min_size=1, max_size=4),
+                              st.integers(1, 64)), max_size=60),
+           st.integers(16, 128))
+    def test_lru_never_exceeds_capacity(ops, capacity):
+        lru = LRUCache(capacity)
+        for key, size in ops:
+            lru.put(key, b"x" * size)
+            assert lru.size <= capacity
+            assert lru.size == sum(len(v) for v in lru.entries.values())
+except ImportError:          # hypothesis optional: property test skipped
+    pass
 
 
 def test_lru_evicts_least_recent():
@@ -92,3 +96,68 @@ def test_eviction_causes_refetch():
     gets = store.stats.gets
     cache.read("a")   # refetch
     assert store.stats.gets == gets + 1
+
+
+def test_lru_eviction_under_byte_pressure_counts_and_bounds():
+    lru = LRUCache(100)
+    lru.put("a", b"x" * 40)
+    lru.put("b", b"x" * 40)
+    lru.put("c", b"x" * 40)            # evicts a (40+40+40 > 100)
+    assert "a" not in lru and "b" in lru and "c" in lru
+    assert lru.size == 80 and lru.stats.evictions == 1
+    lru.put("d", b"x" * 90)            # evicts b AND c
+    assert lru.size == 90 and list(lru.entries) == ["d"]
+    assert lru.stats.evictions == 3
+    assert lru.stats.insertions == 4
+
+
+def test_lru_oversized_value_is_skipped_and_displaces_stale_entry():
+    lru = LRUCache(100)
+    lru.put("k", b"x" * 50)
+    lru.put("k", b"x" * 200)           # oversized replacement: skipped...
+    assert "k" not in lru              # ...and the stale value is dropped
+    assert lru.size == 0
+    lru.put("big", b"x" * 101)
+    assert "big" not in lru and lru.size == 0
+    assert lru.stats.insertions == 1   # only the original 50-byte put
+    assert lru.stats.evictions == 0    # skips are not evictions
+
+
+def test_coalesced_read_is_served_from_payload_without_store_stats():
+    """Satellite fix: a coalesced read must not touch (or mutate-and-undo)
+    the store's request accounting."""
+    store = SimulatedS3(seed=0)
+    store.put("blob", b"p" * 64)
+    store.stats.gets = 0
+    store.stats.get_bytes = 0
+    cache = DistributedCache(az=0, members=2, capacity_per_member=1 << 20,
+                             store=store, cache_on_write=False)
+    assert cache.flight.begin("blob")          # simulate in-flight leader
+    payload, _, src = cache.read("blob")       # this caller coalesces
+    assert src == "coalesced" and payload == b"p" * 64
+    assert store.stats.gets == 0 and store.stats.get_bytes == 0
+    assert cache.stats.coalesced == 1
+    assert cache.stats.store_gets == 0
+
+
+def test_single_flight_leader_failure_releases_flight_and_fills_once():
+    """Leader GET fails on a FaultyStore: leadership must be released so
+    the retry can lead a fresh download — which fills exactly once."""
+    inner = SimulatedS3(seed=0)
+    inner.put("blob", b"v" * 32)
+    inner.stats.gets = 0
+    store = FaultyStore(inner, seed=1, transient_p=0.999)
+    cache = DistributedCache(az=0, members=1, capacity_per_member=1 << 20,
+                             store=store, cache_on_write=False)
+    with pytest.raises(TransientStoreError):
+        cache.read("blob")
+    assert cache.flight.begin("blob")          # leadership was released
+    cache.flight.complete("blob", b"")
+    store.transient_p = 0.0                    # store recovers; retry
+    payload, _, src = cache.read("blob")
+    assert payload == b"v" * 32 and src == "store"
+    member = cache.members[cache.owner_of("blob")]
+    assert member.stats.insertions == 1        # no double-fill
+    assert inner.stats.gets == 1               # failed attempt not billed
+    assert cache.stats.store_gets == 1
+    assert cache.stats.misses == 2             # both attempts were misses

@@ -2,7 +2,6 @@
 failure/replay semantics, batching triggers, retention."""
 
 import numpy as np
-import pytest
 
 from repro.core import (Batcher, BlobShuffleConfig, BlobShufflePipeline,
                         DistributedCache, Record, SimulatedS3,

@@ -1,7 +1,6 @@
 """HLO analyzer: trip-count-aware flops/bytes/collectives (the roofline
 backbone) validated on programs with known costs."""
 
-import re
 
 import jax
 import jax.numpy as jnp

@@ -9,7 +9,6 @@ import pytest
 
 from repro.configs import all_cells, all_skips, get_config, get_shape
 from repro.launch.specs import input_specs
-from repro.models.common import ALL_SHAPES
 
 
 def test_cell_count_matches_assignment():

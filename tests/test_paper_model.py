@@ -1,17 +1,19 @@
 """Paper validation: §4 analytical equations, cost anchors, simulator vs
 the paper's measured results (Figs. 5–9). See EXPERIMENTS.md §Paper."""
 
-import math
 
 import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from hypothesis import given, strategies as st
 
-from repro.core import (AwsPrices, CapacityModel, ModelParams, SimConfig,
+from repro.core import (CapacityModel,
+                        ModelParams,
+                        SimConfig,
                         blobshuffle_cost_per_hour,
-                        kafka_shuffle_cost_per_hour, simulate)
+                        kafka_shuffle_cost_per_hour,
+                        simulate)
 from repro.core import analytical as A
 
 MiB = 1024 ** 2

@@ -1,0 +1,258 @@
+"""Pluggable BlobStore layer: protocol conformance, tier behavior, fault
+injection, engine resilience (retry/backoff/hedging), storage accrual,
+and unified GET accounting."""
+
+import numpy as np
+import pytest
+
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,
+                        DistributedCache, EngineConfig,
+                        ExpressOneZoneStore, FaultyStore, Record,
+                        SimulatedS3)
+from repro.core.costs import EXPRESS_ONE_ZONE, STANDARD, TIERS
+from repro.core.stores import (BlobStore, LatencyModel, SlowDownError,
+                               StoreTimeoutError, TransientStoreError)
+
+CFG = BlobShuffleConfig(batch_bytes=64 * 1024, max_interval_s=0.5,
+                        num_partitions=9, num_az=3)
+DET = LatencyModel(sigma=0.0)
+
+
+def make_records(n, vsize=200, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Record(rng.bytes(8), rng.bytes(vsize), timestamp_us=i)
+            for i in range(n)]
+
+
+def faulty(seed=5, **kw):
+    kw.setdefault("throttle_rate", 5.0)
+    kw.setdefault("throttle_burst", 3)
+    kw.setdefault("prefix_len", 2)
+    kw.setdefault("transient_p", 0.15)
+    return FaultyStore(SimulatedS3(seed=0, retention_s=CFG.retention_s),
+                       seed=seed, **kw)
+
+
+def run_engine(store, ecfg=None, n=400, exactly_once=True, seed=0, cfg=CFG):
+    eng = AsyncShuffleEngine(cfg, ecfg or EngineConfig(), n_instances=6,
+                             store=store, seed=seed,
+                             exactly_once=exactly_once)
+    for i, rec in enumerate(make_records(n)):
+        eng.submit(i * 1e-4, rec)
+    return eng, eng.run()
+
+
+# -- protocol ---------------------------------------------------------------
+
+def test_all_backends_satisfy_blobstore_protocol():
+    stores = [SimulatedS3(), ExpressOneZoneStore(),
+              FaultyStore(SimulatedS3()),
+              FaultyStore(ExpressOneZoneStore())]
+    for s in stores:
+        assert isinstance(s, BlobStore)
+
+
+def test_tier_prices_map_to_store_costs():
+    assert set(TIERS) == {"standard", "express-one-zone",
+                          "premium-low-latency"}
+    std, exp = STANDARD.store_costs(), EXPRESS_ONE_ZONE.store_costs()
+    assert std.put_per_req == pytest.approx(0.005 / 1000)
+    assert exp.put_per_req > std.put_per_req       # premium request price
+    assert exp.storage_per_gb_month > std.storage_per_gb_month
+    assert ExpressOneZoneStore().costs.put_per_req == exp.put_per_req
+
+
+# -- storage accrual (byte·seconds) ----------------------------------------
+
+def test_accrue_storage_is_idempotent_and_retention_does_not_double_count():
+    s = SimulatedS3(retention_s=50.0)
+    s.put("obj", b"x" * 100, now=0.0)
+    s.accrue_storage(10.0)
+    assert s.stats.byte_seconds == pytest.approx(100 * 10.0)
+    s.accrue_storage(10.0)                         # same instant: no-op
+    assert s.stats.byte_seconds == pytest.approx(100 * 10.0)
+    s.run_retention(100.0)                         # deletes; adds the rest
+    assert not s.contains("obj")
+    assert s.stats.byte_seconds == pytest.approx(100 * 100.0)
+
+
+def test_engine_accrues_live_objects_at_end_of_run():
+    store = SimulatedS3(seed=0, retention_s=3600.0)
+    _, m = run_engine(store, exactly_once=False)
+    assert store.stats.byte_seconds > 0            # accrued without expiry
+    explicit = store.stats.cost_usd(store.costs, explicit_storage=True)
+    requests_only = (store.stats.puts * store.costs.put_per_req
+                     + store.stats.gets * store.costs.get_per_req)
+    assert explicit > requests_only
+
+
+def test_engine_retention_sweep_deletes_expired_blobs():
+    store = SimulatedS3(latency=DET, seed=0, retention_s=0.6)
+    eng = AsyncShuffleEngine(CFG, EngineConfig(retention_sweep_s=0.2),
+                             n_instances=3, store=store, seed=0,
+                             exactly_once=False)
+    for i, rec in enumerate(make_records(300)):
+        eng.submit(i * 0.01, rec)                  # ingest spans 3 s
+    m = eng.run()
+    assert m.records_delivered == 300
+    assert m.retention_sweeps >= 2
+    assert m.retention_deleted > 0
+    assert store.stats.byte_seconds > 0
+
+
+# -- express one zone -------------------------------------------------------
+
+def test_expiry_racing_fetches_aborts_cleanly_instead_of_crashing():
+    """A blob deleted by retention before (or during) its fetch must not
+    crash the run: the flight aborts, slots free, the loss is counted."""
+    store = SimulatedS3(latency=DET, seed=0, retention_s=0.05)
+    eng = AsyncShuffleEngine(
+        CFG, EngineConfig(notification_latency_s=1.0,
+                          retention_sweep_s=0.02),
+        n_instances=3, store=store, seed=0, exactly_once=False)
+    for i, rec in enumerate(make_records(200)):
+        eng.submit(i * 0.01, rec)
+    m = eng.run()                                  # must not raise
+    assert m.fetches_aborted > 0
+    assert m.retention_deleted > 0
+    assert all(n == 0 for n in eng._fetch_inflight)  # slots all released
+
+
+def test_sync_read_releases_leadership_on_missing_object():
+    store = SimulatedS3(seed=0)
+    cache = DistributedCache(az=0, members=1, capacity_per_member=1 << 20,
+                             store=store, cache_on_write=False)
+    with pytest.raises(KeyError):
+        cache.read("expired")
+    assert cache.flight.begin("expired")           # leadership released
+    cache.flight.complete("expired", b"")
+    store.put("expired", b"z" * 16)
+    payload, _, src = cache.read("expired")        # recovers normally
+    assert payload == b"z" * 16 and src == "store"
+
+
+def test_express_cross_az_reads_pay_penalty_and_are_counted():
+    e = ExpressOneZoneStore(latency=LatencyModel(sigma=0.0), seed=0,
+                            cross_az_penalty_s=0.02)
+    e.put("b", b"x" * 1000, now=0.0, az=1)
+    _, same = e.get("b", az=1)
+    _, cross = e.get("b", az=2)
+    assert cross == pytest.approx(same + 0.02)
+    assert e.stats.cross_az_gets == 1
+    assert e.stats.cross_az_get_bytes == 1000
+    _, unknown = e.get("b")                        # az-less caller: no fee
+    assert unknown == pytest.approx(same)
+    assert e.stats.cross_az_gets == 1
+    # the routing charge lands on the bill (zonal tiers only)
+    expected = (e.stats.puts * e.costs.put_per_req
+                + e.stats.gets * e.costs.get_per_req
+                + 1000 / 1e9 * e.costs.cross_az_per_gb)
+    assert e.costs.cross_az_per_gb > 0
+    assert e.stats.cost_usd(e.costs) == pytest.approx(expected)
+
+
+def test_express_is_faster_than_standard_for_same_seed():
+    std = SimulatedS3(latency=LatencyModel(sigma=0.0))
+    exp = ExpressOneZoneStore(latency=None, seed=0)
+    exp.latency.sigma = 0.0
+    size = 1 << 20
+    assert (exp.latency.put_median(size) < std.latency.put_median(size))
+    assert (exp.latency.get_median(size) < std.latency.get_median(size))
+
+
+# -- fault injection --------------------------------------------------------
+
+def test_token_bucket_throttles_per_prefix_and_refills():
+    f = FaultyStore(SimulatedS3(), seed=0, throttle_rate=1.0,
+                    throttle_burst=2, prefix_len=2)
+    f.put("aa-1", b"x", now=0.0)
+    f.put("aa-2", b"x", now=0.0)
+    with pytest.raises(SlowDownError) as ei:
+        f.put("aa-3", b"x", now=0.0)               # bucket drained
+    assert ei.value.retry_after_s > 0
+    f.put("bb-1", b"x", now=0.0)                   # other prefix unaffected
+    f.put("aa-4", b"x", now=5.0)                   # refilled by now
+    assert f.faults.slowdowns == 1
+    assert f.stats.puts == 4                       # failed PUT never billed
+    assert not f.contains("aa-3")                  # ... nor applied
+
+
+def test_transient_and_timeout_faults_have_detection_latency():
+    f = FaultyStore(SimulatedS3(), seed=3, transient_p=1.0, detect_s=0.07)
+    with pytest.raises(TransientStoreError) as ei:
+        f.begin_put("b", 100, now=0.0)
+    assert ei.value.detect_after_s == pytest.approx(0.07)
+    t = FaultyStore(SimulatedS3(), seed=3, timeout_p=1.0, timeout_s=1.5)
+    with pytest.raises(StoreTimeoutError) as ei:
+        t.begin_get("missing", now=0.0)            # fails before lookup
+    assert ei.value.detect_after_s == pytest.approx(1.5)
+    assert t.stats.gets == 0
+
+
+# -- engine resilience ------------------------------------------------------
+
+def test_retries_deliver_every_record_exactly_once_under_faults():
+    store = faulty()
+    eng, m = run_engine(store, n=600)
+    flat = [r.timestamp_us for rs in eng.out.values() for r in rs]
+    assert sorted(flat) == list(range(600))        # no loss, no duplicates
+    assert m.duplicates_delivered == 0
+    assert m.put_retries + m.get_retries > 0
+    assert m.uploads_aborted == 0 and m.fetches_aborted == 0
+    assert store.faults.total > 0
+
+
+def test_throttling_applies_lane_backpressure():
+    store = faulty(transient_p=0.0, throttle_rate=2.0, throttle_burst=2)
+    _, m = run_engine(store, n=600)
+    assert m.throttle_events > 0
+    assert m.records_delivered == 600
+
+
+def test_faulty_run_is_bit_reproducible_for_fixed_seed():
+    def once():
+        _, m = run_engine(faulty(), n=500)
+        return (m.makespan_s, tuple(m.record_latencies), m.put_retries,
+                m.get_retries, m.throttle_events)
+    assert once() == once()
+
+
+def test_get_accounting_is_consistent_across_layers():
+    """Satellite invariant: every store GET is led by exactly one cache
+    cluster — store-side and cache-side request counts must agree."""
+    for store in (SimulatedS3(seed=0), faulty()):
+        eng, m = run_engine(store, n=500)
+        assert m.records_delivered == 500
+        assert store.stats.gets == sum(c.stats.store_gets
+                                       for c in eng.caches)
+
+
+def test_hedged_gets_fire_on_slow_tail_and_deliver_exactly_once():
+    cfg = BlobShuffleConfig(batch_bytes=8 * 1024, max_interval_s=0.2,
+                            num_partitions=9, num_az=3,
+                            cache_on_write=False, distributed_cache_bytes=1)
+    store = SimulatedS3(latency=LatencyModel(sigma=1.5), seed=0)
+    eng = AsyncShuffleEngine(
+        cfg, EngineConfig(hedge_quantile=50.0, hedge_min_samples=5),
+        n_instances=3, store=store, seed=0, exactly_once=True)
+    for i, rec in enumerate(make_records(600)):
+        eng.submit(i * 1e-5, rec)
+    m = eng.run()
+    flat = [r.timestamp_us for rs in eng.out.values() for r in rs]
+    assert sorted(flat) == list(range(600))
+    assert m.hedges_issued > 0
+    assert m.hedges_won <= m.hedges_issued
+    # hedge requests are billed + counted through the same choke point
+    assert store.stats.gets == sum(c.stats.store_gets for c in eng.caches)
+
+
+def test_pipeline_runs_on_alternate_backends():
+    from repro.core import BlobShufflePipeline
+    recs = make_records(300)
+    for store in (ExpressOneZoneStore(seed=0, num_az=CFG.num_az),
+                  faulty(transient_p=0.1)):
+        pipe = BlobShufflePipeline(CFG, n_instances=6, store=store,
+                                   exactly_once=True)
+        out = pipe.run(recs, commit_every=100)
+        flat = [r.timestamp_us for rs in out.values() for r in rs]
+        assert sorted(flat) == list(range(300))
