@@ -32,10 +32,13 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--suite", default="all",
                     choices=["all", "paper", "async", "tiers", "tpu",
-                             "kernels", "dryrun"])
+                             "kernels", "dryrun", "micro"])
     args = ap.parse_args()
 
     rows = []
+    if args.suite in ("all", "micro"):
+        from benchmarks import micro
+        rows += micro.run()    # also writes BENCH_micro.json
     if args.suite in ("all", "async"):
         from benchmarks import async_engine
         rows += async_engine.run()

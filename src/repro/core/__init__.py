@@ -4,8 +4,11 @@ capacity/latency models, and the §5 discrete-event simulator."""
 
 from repro.core.records import (Record, serialize, deserialize,
                                 deserialize_all, default_partitioner)
+from repro.core.recordbatch import (RecordBatch, fnv1a_batch,
+                                    default_partitioner_batch)
 from repro.core.blob import (Blob, BlobIndex, ByteRange, Notification,
-                             build_blob, extract)
+                             build_blob, build_blob_from_buffers,
+                             extract, extract_batch)
 from repro.core.stores import (BlobStore, SimulatedS3, LatencyModel,
                                StoreCosts, StoreStats, StoreError,
                                SlowDownError, TransientStoreError,
@@ -19,7 +22,8 @@ from repro.core.commit import CommitCoordinator
 from repro.core.events import EventLoop
 from repro.core.engine import (AsyncShuffleEngine, EngineConfig,
                                ShuffleMetrics)
-from repro.core.workload import WorkloadConfig, drive, generate
+from repro.core.workload import (WorkloadConfig, drive, generate,
+                                 generate_batch)
 from repro.core.pipeline import BlobShufflePipeline
 from repro.core.analytical import ModelParams
 from repro.core.capacity import CapacityModel

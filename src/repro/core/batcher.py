@@ -9,16 +9,29 @@ accumulated size per AZ is tracked. A batch is finalized when
 Finalized blobs upload asynchronously; an internal completion queue is
 polled from the processing loop; per contributing partition a notification
 is emitted. Commits block until all uploads completed + notifications sent.
+
+Hot-path layout: buffers hold **serialized chunks** (bytes-like), not
+``Record`` objects. The legacy ``process(record)`` path serializes each
+record once on arrival; the columnar ``ingest(RecordBatch)`` path
+partitions a whole batch with the vectorized FNV-1a partitioner, groups
+rows per destination with one ``np.argsort``, and serializes each group
+into a single chunk. ``_finalize`` then joins chunks exactly once into
+the blob payload (``build_blob_from_buffers``) — the bytes are never
+re-copied between buffering and upload.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import heapq
 from typing import Callable, Dict, List, Optional, Tuple
 
-from repro.core.blob import Blob, Notification, build_blob
+import numpy as np
+
+from repro.core.blob import Blob, Notification, build_blob_from_buffers
 from repro.core.cache import DistributedCache
-from repro.core.records import Record, serialized_size
+from repro.core.recordbatch import RecordBatch
+from repro.core.records import Record, serialize
 
 
 @dataclasses.dataclass(frozen=True)
@@ -42,6 +55,19 @@ class PendingUpload:
     completes_at: float
 
 
+class _PartitionBuffer:
+    """Serialized chunks + record count for one destination partition."""
+    __slots__ = ("chunks", "count")
+
+    def __init__(self):
+        self.chunks: List = []
+        self.count = 0
+
+    def append(self, chunk, n: int) -> None:
+        self.chunks.append(chunk)
+        self.count += n
+
+
 @dataclasses.dataclass
 class BatcherStats:
     records_in: int = 0
@@ -62,12 +88,17 @@ class Batcher:
                  partitioner: Callable[[bytes], int],
                  cache: DistributedCache,
                  uploader: Optional[Callable[
-                     [Blob, List[Notification], Dict[int, List[Record]],
+                     [Blob, List[Notification], Dict[int, int],
                       float], None]] = None,
-                 name: Optional[str] = None):
+                 name: Optional[str] = None,
+                 partitioner_batch: Optional[Callable[
+                     [RecordBatch], np.ndarray]] = None):
         self.cfg = cfg
         self.partition_to_az = partition_to_az
         self.partitioner = partitioner
+        # vectorized partitioner for RecordBatch ingest; when absent the
+        # scalar partitioner is applied row-by-row (correct but slow)
+        self.partitioner_batch = partitioner_batch
         self.cache = cache
         # When named, blob ids are "<name>-<seq>" instead of random uuids:
         # deterministic across runs (bit-reproducible virtual-clock runs,
@@ -76,46 +107,137 @@ class Batcher:
         self.name = name
         self._blob_seq = 0
         # Event-driven hook: when set, finalized blobs are handed to
-        # ``uploader(blob, notes, per_partition_records, now)`` instead of
+        # ``uploader(blob, notes, per_partition_counts, now)`` instead of
         # being written synchronously — the async engine queues them on a
         # bounded per-instance upload lane and completes them on the
         # virtual clock. ``pending``/``ready`` stay empty in that mode.
         self.uploader = uploader
-        # az -> partition -> [records]; az -> bytes
-        self.buffers: Dict[int, Dict[int, List[Record]]] = {}
+        # az -> partition -> serialized chunks; az -> bytes
+        self.buffers: Dict[int, Dict[int, _PartitionBuffer]] = {}
         self.buffer_bytes: Dict[int, int] = {}
         self.last_finalize: Dict[int, float] = {}
-        self.pending: List[PendingUpload] = []
+        # min-heap of (completes_at, seq, PendingUpload): poll/on_commit
+        # pop in completion order instead of O(n)-scanning per record
+        self.pending: List[Tuple[float, int, PendingUpload]] = []
+        self._pending_seq = 0
         self.ready: List[Notification] = []
         self.stats = BatcherStats()
+        self._az_table: Optional[np.ndarray] = None
 
     # -- main processing loop ---------------------------------------------
     def process(self, rec: Record, now: float) -> List[Notification]:
         """Route one record into its per-partition buffer; poll completions."""
         part = self.partitioner(rec.key)
         az = self.partition_to_az(part)
+        chunk = serialize(rec)
+        self._append(az, part, chunk, 1, len(chunk), now)
+        self._check_triggers(az, now)
+        return self.poll(now)
+
+    def ingest(self, batch: RecordBatch, now: float) -> List[Notification]:
+        """Columnar bulk ingest: partition, group, and serialize a whole
+        ``RecordBatch`` with vectorized ops — one stable argsort by
+        (AZ, partition), then one serialized wire buffer **per touched
+        AZ** whose per-partition chunks are zero-copy memoryview slices.
+        Serializing per AZ (not per batch) means a buffered slice pins
+        only its own AZ's wire bytes, which are released exactly when
+        that AZ finalizes. Finalize triggers run after every partition
+        group, so a blob overshoots ``batch_bytes`` by at most one
+        group — mirroring the legacy path's at-most-one-record overshoot
+        at batch granularity."""
+        n = len(batch)
+        if n == 0:
+            return self.poll(now)
+        parts = self.compute_partitions(batch)
+        order, starts = self._group(batch)
+        sizes = batch.serialized_sizes()
+        az_table = self._partition_az_table()
+        group_az = az_table[parts[order[starts[:-1]]]]
+        n_groups = len(group_az)
+        i = 0
+        while i < n_groups:
+            j = i
+            while j < n_groups and group_az[j] == group_az[i]:
+                j += 1
+            az = int(group_az[i])
+            rs, re = int(starts[i]), int(starts[j])
+            az_rows = order[rs:re]
+            wire = memoryview(batch.serialize_rows(az_rows))
+            boff = np.zeros(re - rs + 1, np.int64)
+            np.cumsum(sizes[az_rows], out=boff[1:])
+            for g in range(i, j):
+                s = int(starts[g]) - rs
+                e = int(starts[g + 1]) - rs
+                part = int(parts[order[rs + s]])
+                self._append(az, part, wire[boff[s]:boff[e]],
+                             e - s, int(boff[e] - boff[s]), now)
+                self._check_triggers(az, now)
+            i = j
+        return self.poll(now)
+
+    def _group(self, batch: RecordBatch) -> Tuple[np.ndarray, np.ndarray]:
+        """Destination grouping, cached on the batch: ``order`` is the
+        stable row permutation sorted by (AZ, partition); ``starts`` the
+        (AZ, partition)-group boundaries within it (len = groups + 1).
+        Shared by the engine's arrival bookkeeping so the argsort runs
+        once per batch."""
+        if batch.groups is None:
+            parts = self.compute_partitions(batch)
+            az_table = self._partition_az_table()
+            composite = az_table[parts] * self.cfg.num_partitions + parts
+            order = np.argsort(composite, kind="stable")
+            sc = composite[order]
+            bounds = np.flatnonzero(sc[1:] != sc[:-1]) + 1
+            batch.groups = (order, np.concatenate(([0], bounds,
+                                                   [len(parts)])))
+        return batch.groups
+
+    def compute_partitions(self, batch: RecordBatch) -> np.ndarray:
+        """(N,) int32 destination partitions, cached on the batch."""
+        if batch.partitions is None:
+            if self.partitioner_batch is not None:
+                batch.partitions = np.asarray(
+                    self.partitioner_batch(batch), np.int32)
+            else:
+                batch.partitions = np.fromiter(
+                    (self.partitioner(batch.key(i)) for i in range(len(batch))),
+                    np.int32, len(batch))
+        return batch.partitions
+
+    def _partition_az_table(self) -> np.ndarray:
+        if self._az_table is None:
+            self._az_table = np.fromiter(
+                (self.partition_to_az(p)
+                 for p in range(self.cfg.num_partitions)),
+                np.int64, self.cfg.num_partitions)
+        return self._az_table
+
+    def _append(self, az: int, part: int, chunk, n: int, nbytes: int,
+                now: float) -> None:
         buf = self.buffers.setdefault(az, {})
-        buf.setdefault(part, []).append(rec)
-        sz = serialized_size(rec)
-        self.buffer_bytes[az] = self.buffer_bytes.get(az, 0) + sz
-        self.stats.records_in += 1
-        self.stats.bytes_in += sz
+        pb = buf.get(part)
+        if pb is None:
+            pb = buf[part] = _PartitionBuffer()
+        pb.append(chunk, n)
+        self.buffer_bytes[az] = self.buffer_bytes.get(az, 0) + nbytes
+        self.stats.records_in += n
+        self.stats.bytes_in += nbytes
         self.last_finalize.setdefault(az, now)
 
+    def _check_triggers(self, az: int, now: float) -> None:
         if self.buffer_bytes[az] >= self.cfg.batch_bytes:
             self._finalize(az, now, "size")
         elif now - self.last_finalize[az] >= self.cfg.max_interval_s:
             self._finalize(az, now, "interval")
-        return self.poll(now)
 
     def poll(self, now: float) -> List[Notification]:
         """Drain the upload-completion queue (processed from the main
-        thread, like the paper's internal result queue)."""
-        done = [p for p in self.pending if p.completes_at <= now]
-        self.pending = [p for p in self.pending if p.completes_at > now]
+        thread, like the paper's internal result queue). The heap pops
+        only completed entries — O(done · log n), not an O(n) scan."""
         out = list(self.ready)
         self.ready.clear()
-        for p in done:
+        while self.pending and self.pending[0][0] <= now:
+            _, _, p = heapq.heappop(self.pending)
             out.extend(p.notifications)
             self.stats.notifications += len(p.notifications)
         return out
@@ -144,13 +266,13 @@ class Batcher:
         """Finalize all buffers and BLOCK until outstanding uploads are
         durable; returns (notifications, commit-block seconds)."""
         self.flush_all(now)
-        block_until = max((p.completes_at for p in self.pending),
-                          default=now)
+        block_until = now
         notes: List[Notification] = []
-        for p in self.pending:
+        while self.pending:
+            completes_at, _, p = heapq.heappop(self.pending)
+            block_until = max(block_until, completes_at)
             notes.extend(p.notifications)
             self.stats.notifications += len(p.notifications)
-        self.pending.clear()
         notes.extend(self.ready)
         self.ready.clear()
         return notes, max(0.0, block_until - now)
@@ -166,12 +288,19 @@ class Batcher:
         if self.name is not None:
             bid = f"{self.name}-{self._blob_seq:06d}"
             self._blob_seq += 1
-        blob, notes = build_blob(parts, target_az=az, blob_id=bid)
+        blob, notes = build_blob_from_buffers(
+            {p: pb.chunks for p, pb in parts.items()}, target_az=az,
+            blob_id=bid)
         if self.uploader is not None:
-            self.uploader(blob, notes, parts, now)
+            counts = {p: pb.count for p, pb in parts.items()}
+            self.uploader(blob, notes, counts, now)
         else:
             lat = self.cache.write(blob.blob_id, blob.payload, now)
-            self.pending.append(PendingUpload(blob, notes, now, now + lat))
+            heapq.heappush(
+                self.pending,
+                (now + lat, self._pending_seq,
+                 PendingUpload(blob, notes, now, now + lat)))
+            self._pending_seq += 1
         self.stats.blobs += 1
         self.stats.blob_bytes += blob.size
         setattr(self.stats, f"finalize_{why}",

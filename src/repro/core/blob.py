@@ -10,8 +10,9 @@ from __future__ import annotations
 
 import dataclasses
 import uuid
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.recordbatch import RecordBatch
 from repro.core.records import Record, deserialize_all, serialize
 
 
@@ -63,26 +64,52 @@ def new_blob_id() -> str:
     return uuid.uuid4().hex
 
 
-def build_blob(per_partition: Dict[int, List[Record]], target_az: int,
-               blob_id: Optional[str] = None) -> Tuple[Blob, List[Notification]]:
-    """Concatenate per-partition record buffers into one blob + notifications."""
+def build_blob_from_buffers(per_partition: Dict[int, Sequence],
+                            target_az: int,
+                            blob_id: Optional[str] = None
+                            ) -> Tuple[Blob, List[Notification]]:
+    """Assemble a blob from per-partition lists of already-serialized
+    chunks (any bytes-like: ``bytes``, ``bytearray``, ``memoryview``).
+
+    This is the zero-copy batch path: chunks are joined exactly once into
+    the payload — no per-partition intermediate join, no re-serialization.
+    """
     bid = blob_id or new_blob_id()
-    chunks: List[bytes] = []
+    chunks: List = []
     ranges: Dict[int, ByteRange] = {}
     off = 0
     for part in sorted(per_partition):
-        buf = b"".join(serialize(r) for r in per_partition[part])
-        if not buf:
+        ln = sum(len(c) for c in per_partition[part])
+        if ln == 0:
             continue
-        chunks.append(buf)
-        ranges[part] = ByteRange(off, len(buf))
-        off += len(buf)
+        chunks.extend(per_partition[part])
+        ranges[part] = ByteRange(off, ln)
+        off += ln
     blob = Blob(bid, b"".join(chunks), BlobIndex(ranges), target_az)
     notes = [Notification(bid, p, r, target_az)
              for p, r in sorted(ranges.items())]
     return blob, notes
 
 
-def extract(payload: bytes, rng: ByteRange) -> List[Record]:
-    """Debatch one partition's records from a blob payload (or sub-blob)."""
-    return deserialize_all(payload[rng.offset:rng.end])
+def build_blob(per_partition: Dict[int, List[Record]], target_az: int,
+               blob_id: Optional[str] = None) -> Tuple[Blob, List[Notification]]:
+    """Concatenate per-partition record buffers into one blob + notifications
+    (legacy per-``Record`` convenience; payload bytes are identical to the
+    chunked path)."""
+    return build_blob_from_buffers(
+        {p: [serialize(r) for r in recs]
+         for p, recs in per_partition.items()},
+        target_az, blob_id)
+
+
+def extract(payload, rng: ByteRange) -> List[Record]:
+    """Debatch one partition's records from a blob payload (or sub-blob).
+    The byte range is sliced as a ``memoryview`` — no payload copy."""
+    return deserialize_all(memoryview(payload)[rng.offset:rng.end])
+
+
+def extract_batch(payload, rng: ByteRange) -> RecordBatch:
+    """Columnar debatch: one partition's byte range -> ``RecordBatch``
+    (memoryview slice in, vectorized arena gather out — the payload bytes
+    are never copied into intermediate per-record objects)."""
+    return RecordBatch.from_buffer(memoryview(payload)[rng.offset:rng.end])

@@ -19,6 +19,7 @@ from typing import Callable, List, Optional, Set
 from repro.core.batcher import Batcher
 from repro.core.blob import Notification
 from repro.core.debatcher import Debatcher
+from repro.core.recordbatch import RecordBatch
 from repro.core.records import Record
 
 
@@ -38,7 +39,8 @@ class CommitCoordinator:
         self.batcher = batcher
         self.debatchers = debatchers
         self.publish = publish
-        self.uncommitted: List[Record] = []   # source records since commit
+        # source records (or whole RecordBatches) since the last commit
+        self.uncommitted: List = []
         self.unpublished: List[Notification] = []
         self.stats = CommitStats()
         # async-engine state: blobs whose PUT is still in flight, and the
@@ -49,6 +51,13 @@ class CommitCoordinator:
     def process(self, rec: Record, now: float) -> None:
         self.uncommitted.append(rec)
         for note in self.batcher.process(rec, now):
+            self.unpublished.append(note)
+
+    def ingest(self, batch: RecordBatch, now: float) -> None:
+        """Columnar bulk ingest: the whole batch is tracked as one
+        uncommitted unit (flattened to records only on replay)."""
+        self.uncommitted.append(batch)
+        for note in self.batcher.ingest(batch, now):
             self.unpublished.append(note)
 
     def commit(self, now: float) -> float:
@@ -116,7 +125,12 @@ class CommitCoordinator:
         """Crash before commit: uploads may be orphaned; notifications not
         yet published are lost; uncommitted source records replay."""
         self.stats.failures_injected += 1
-        replay = list(self.uncommitted)
+        replay: List[Record] = []
+        for item in self.uncommitted:
+            if isinstance(item, RecordBatch):
+                replay.extend(item.iter_records())
+            else:
+                replay.append(item)
         self.stats.records_replayed += len(replay)
         # lost: pending uploads (orphans stay in the store — harmless),
         # unpublished notifications, and all in-memory buffers.

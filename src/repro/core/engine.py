@@ -51,6 +51,7 @@ from repro.core.cache import DistributedCache, LocalCache
 from repro.core.commit import CommitCoordinator
 from repro.core.debatcher import Debatcher
 from repro.core.events import EventLoop
+from repro.core.recordbatch import RecordBatch, default_partitioner_batch
 from repro.core.records import Record, default_partitioner
 from repro.core.stores import BlobStore, SimulatedS3, SlowDownError, StoreError
 
@@ -173,7 +174,10 @@ class AsyncShuffleEngine:
                         lambda key: default_partitioner(
                             key, cfg.num_partitions),
                         self.caches[az], uploader=self._make_uploader(i),
-                        name=f"i{i}")
+                        name=f"i{i}",
+                        partitioner_batch=lambda batch: (
+                            default_partitioner_batch(
+                                batch, cfg.num_partitions)))
             self.batchers.append(b)
             self.coordinators.append(
                 CommitCoordinator(b, self.debatchers, self._publish))
@@ -235,12 +239,63 @@ class AsyncShuffleEngine:
         # finalize inside process() already sees it
         self._arrivals[(i, part)].append(now)
         self.coordinators[i].process(rec, now)
-        if (b.buffer_bytes.get(az, 0) > 0
+        self._arm_flush_timer(i, az)
+        self._note_ingested(1)
+
+    def submit_batch(self, t: float, batch: RecordBatch,
+                     inst: Optional[int] = None,
+                     times: Optional[np.ndarray] = None) -> None:
+        """Schedule a whole ``RecordBatch`` to arrive at instance ``inst``
+        (or round-robin) at virtual time ``t`` — the columnar ingest lane.
+
+        ``times`` optionally carries each record's true source arrival
+        time (for end-to-end latency accounting); the batch itself is
+        processed when it is delivered at ``t``, like an upstream consumer
+        poll that hands over one micro-batch."""
+        if inst is None:
+            inst = self._rr
+            self._rr = (self._rr + 1) % self.n_instances
+        self._pending_ingests += len(batch)
+        self.metrics.records_in += len(batch)
+        self.loop.at(t, self._ingest_batch, inst, batch, times)
+
+    def _ingest_batch(self, i: int, batch: RecordBatch,
+                      times: Optional[np.ndarray]) -> None:
+        now = self.loop.now
+        n = len(batch)
+        if n == 0:
+            self._note_ingested(0)
+            return
+        b = self.batchers[i]
+        parts = b.compute_partitions(batch)
+        # arrivals enter the per-partition FIFOs (in row = arrival order)
+        # before ingest so finalizes inside ingest() already see them;
+        # the (AZ, partition) grouping is computed once and cached on the
+        # batch — Batcher.ingest reuses it instead of re-sorting
+        order, starts = b._group(batch)
+        for s, e in zip(starts[:-1], starts[1:]):
+            g = order[s:e]
+            part = int(parts[g[0]])
+            fifo = self._arrivals[(i, part)]
+            if times is None:
+                fifo.extend([now] * len(g))
+            else:
+                fifo.extend(float(times[j]) for j in g)
+        self.coordinators[i].ingest(batch, now)
+        az_table = b._partition_az_table()
+        for az in dict.fromkeys(int(a) for a in az_table[parts]):
+            self._arm_flush_timer(i, az)
+        self._note_ingested(n)
+
+    def _arm_flush_timer(self, i: int, az: int) -> None:
+        if (self.batchers[i].buffer_bytes.get(az, 0) > 0
                 and (i, az) not in self._flush_timers):
             self._flush_timers.add((i, az))
             self.loop.after(self.cfg.max_interval_s + 1e-9,
                             self._flush_check, i, az)
-        self._pending_ingests -= 1
+
+    def _note_ingested(self, n: int) -> None:
+        self._pending_ingests -= n
         if self._pending_ingests == 0:
             # sources drained: flush + commit whatever remains
             self.loop.after(1e-6, self._commit_all)
@@ -280,10 +335,10 @@ class AsyncShuffleEngine:
     # -- upload lane ------------------------------------------------------
     def _make_uploader(self, i: int) -> Callable:
         def uploader(blob: Blob, notes: List[Notification],
-                     parts: Dict[int, List[Record]], now: float) -> None:
-            for part, recs in parts.items():
+                     counts: Dict[int, int], now: float) -> None:
+            for part, cnt in counts.items():
                 q = self._arrivals.get((i, part))
-                n = min(len(recs), len(q)) if q else 0
+                n = min(cnt, len(q)) if q else 0
                 self._blob_arrivals[(blob.blob_id, part)] = \
                     [q.popleft() for _ in range(n)]
             self.coordinators[i].note_upload_started(blob.blob_id)

@@ -7,6 +7,7 @@ form; a blob is the concatenation of per-partition byte buffers.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import struct
 from typing import List, Tuple
 
@@ -20,8 +21,10 @@ class Record:
     timestamp_us: int = 0
     headers: Tuple[Tuple[bytes, bytes], ...] = ()
 
-    @property
+    @functools.cached_property
     def size(self) -> int:
+        # cached: records are frozen, and the hot path reads size per
+        # buffered record (cached_property writes around the frozen guard)
         return serialized_size(self)
 
 
@@ -42,23 +45,29 @@ def serialize(rec: Record) -> bytes:
     return b"".join(out)
 
 
-def deserialize(buf: bytes, offset: int = 0) -> Tuple[Record, int]:
-    klen, vlen, ts, nh = _HDR.unpack_from(buf, offset)
+def deserialize(buf, offset: int = 0) -> Tuple[Record, int]:
+    """Parse one record from any bytes-like object. Slicing goes through a
+    ``memoryview`` so each field is copied exactly once — callers can pass
+    a view over a blob payload without materializing the range first."""
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
+    klen, vlen, ts, nh = _HDR.unpack_from(mv, offset)
     p = offset + _HDR.size
-    key = bytes(buf[p:p + klen]); p += klen
-    value = bytes(buf[p:p + vlen]); p += vlen
+    key = bytes(mv[p:p + klen]); p += klen
+    value = bytes(mv[p:p + vlen]); p += vlen
     headers = []
     for _ in range(nh):
-        hk, hv = struct.unpack_from("<II", buf, p); p += 8
-        headers.append((bytes(buf[p:p + hk]), bytes(buf[p + hk:p + hk + hv])))
+        hk, hv = struct.unpack_from("<II", mv, p); p += 8
+        headers.append((bytes(mv[p:p + hk]), bytes(mv[p + hk:p + hk + hv])))
         p += hk + hv
     return Record(key, value, ts, tuple(headers)), p
 
 
-def deserialize_all(buf: bytes) -> List[Record]:
+def deserialize_all(buf) -> List[Record]:
+    mv = buf if isinstance(buf, memoryview) else memoryview(buf)
     out, p = [], 0
-    while p < len(buf):
-        rec, p = deserialize(buf, p)
+    end = len(mv)
+    while p < end:
+        rec, p = deserialize(mv, p)
         out.append(rec)
     return out
 

@@ -87,7 +87,8 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
                    = None, scale: float = 0.01, exactly_once: bool = False,
                    key_skew: float = 0.5,
                    latency: Optional[LatencyModel] = None,
-                   store: Optional[BlobStore] = None
+                   store: Optional[BlobStore] = None,
+                   ingest_batch_records: Optional[int] = None
                    ) -> "tuple[AsyncShuffleEngine, dict]":
     """Measured (not modeled) run of a ``SimConfig`` workload through the
     event-driven engine, scaled down by ``scale`` in offered rate and
@@ -98,6 +99,11 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
     ``store`` swaps the storage backend (any ``BlobStore``: another
     tier, or a ``FaultyStore``-wrapped one for degraded-store runs);
     default is ``SimulatedS3`` with the calibrated ``latency`` model.
+
+    ``ingest_batch_records`` switches the driver to the columnar ingest
+    lane: records enter as ``RecordBatch`` micro-batches of that many
+    consecutive arrivals (vectorized partition + binning in the Batcher)
+    instead of one event per record.
     """
     bcfg = BlobShuffleConfig(
         batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
@@ -116,7 +122,7 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
             commit_interval_s=cfg.commit_interval_s),
         n_instances=cfg.n_inst, store=store, seed=cfg.seed,
         exactly_once=exactly_once)
-    drive(eng, wl)
+    drive(eng, wl, batch_records=ingest_batch_records)
     metrics = eng.run()
     return eng, metrics.summary(store)
 

@@ -21,6 +21,21 @@ class Packing(NamedTuple):
     counts: jax.Array   # (bins,) int32 — notification metadata (true demand)
 
 
+def sorted_order(keys: jax.Array, num_bins: int
+                 ) -> "tuple[jax.Array, jax.Array, jax.Array]":
+    """Stable argsort-by-destination description: (order, starts, counts).
+
+    ``order`` maps sorted position -> unit index; ``starts[b]`` is bin
+    b's first position within ``order``; ``counts`` is the true demand.
+    This is the shared front half of ``bin_pack`` and the fused pack
+    kernels (``repro.kernels.blob_pack``)."""
+    order = jnp.argsort(keys, stable=True).astype(jnp.int32)
+    counts = jnp.bincount(keys, length=num_bins).astype(jnp.int32)
+    starts = jnp.concatenate(
+        [jnp.zeros(1, jnp.int32), jnp.cumsum(counts)[:-1].astype(jnp.int32)])
+    return order, starts, counts
+
+
 def bin_pack(keys: jax.Array, num_bins: int, capacity: int) -> Packing:
     """Assign each unit a slot = key*capacity + rank-within-key.
 
@@ -29,17 +44,13 @@ def bin_pack(keys: jax.Array, num_bins: int, capacity: int) -> Packing:
     ("records for a given partition appear sequentially within the batch").
     """
     U = keys.shape[0]
-    order = jnp.argsort(keys, stable=True)
+    order, starts, counts = sorted_order(keys, num_bins)
     sorted_keys = keys[order]
-    counts = jnp.bincount(keys, length=num_bins)
-    starts = jnp.concatenate(
-        [jnp.zeros(1, counts.dtype), jnp.cumsum(counts)[:-1]])
-    rank_sorted = jnp.arange(U, dtype=jnp.int32) - starts[sorted_keys].astype(
-        jnp.int32)
+    rank_sorted = jnp.arange(U, dtype=jnp.int32) - starts[sorted_keys]
     rank = jnp.zeros(U, jnp.int32).at[order].set(rank_sorted)
     valid = rank < capacity
     slot = keys.astype(jnp.int32) * capacity + jnp.minimum(rank, capacity - 1)
-    return Packing(slot, valid, counts.astype(jnp.int32))
+    return Packing(slot, valid, counts)
 
 
 def scatter_to_bins(values: jax.Array, pack: Packing, num_bins: int,

@@ -5,16 +5,19 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.blob_pack.kernel import blob_pack_pallas
-from repro.kernels.blob_pack.ops import pack_from_keys
+from repro.kernels.blob_pack.kernel import (blob_pack_fused_pallas,
+                                            blob_pack_pallas)
+from repro.kernels.blob_pack.ops import blob_pack_fused, pack_from_keys
 from repro.kernels.blob_pack.ref import blob_pack_ref
-from repro.kernels.blob_unpack.kernel import blob_unpack_pallas
+from repro.kernels.blob_unpack.kernel import (blob_unpack_fused_pallas,
+                                              blob_unpack_pallas)
+from repro.kernels.blob_unpack.ops import unpack_from_keys
 from repro.kernels.blob_unpack.ref import blob_unpack_ref
 from repro.kernels.flash_attention.kernel import flash_attention_pallas
 from repro.kernels.flash_attention.ref import flash_ref
 from repro.kernels.ssd_scan.ops import ssd_scan_op
 from repro.models.ssm import ssd_reference
-from repro.shuffle.binning import bin_pack
+from repro.shuffle.binning import bin_pack, sorted_order
 
 
 # --- blob_pack ------------------------------------------------------------
@@ -83,6 +86,62 @@ def test_pack_unpack_roundtrip():
     buf = blob_pack_pallas(x, order, starts, counts, capacity=64,
                            interpret=True)
     back = blob_unpack_pallas(buf, pack.slot, pack.valid, interpret=True)
+    np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-6)
+
+
+# --- fused single-pass kernels ----------------------------------------------
+
+@pytest.mark.parametrize("T,d,bins,cap,dtype", [
+    (64, 32, 8, 16, jnp.float32),
+    (100, 16, 4, 8, jnp.float32),       # drops (cap < demand)
+    (64, 128, 8, 16, jnp.bfloat16),
+    (7, 8, 3, 4, jnp.float32),          # tiny / ragged
+    (50, 8, 4, 200, jnp.float32),       # capacity > FUSED tile, uneven
+    (128, 64, 16, 8, jnp.int32),        # integer payload (metadata)
+])
+def test_blob_pack_fused_matches_ref(T, d, bins, cap, dtype):
+    key = jax.random.key(0)
+    if jnp.issubdtype(dtype, jnp.integer):
+        x = jax.random.randint(key, (T, d), 0, 100).astype(dtype)
+    else:
+        x = jax.random.normal(key, (T, d)).astype(dtype)
+    keys = jax.random.randint(jax.random.key(1), (T,), 0, bins)
+    order, starts, counts = sorted_order(keys, bins)
+    ref = blob_pack_ref(x, order, starts, counts, capacity=cap)
+    out = blob_pack_fused_pallas(x, order, starts, counts, capacity=cap,
+                                 interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+    # the jit-fused front half (sort/rank + gather in one pass) agrees too
+    fused, (o2, s2, c2) = blob_pack_fused(x, keys, num_bins=bins,
+                                          capacity=cap, use_pallas=True)
+    np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+    np.testing.assert_array_equal(np.asarray(o2), np.asarray(order))
+    np.testing.assert_array_equal(np.asarray(c2), np.asarray(counts))
+
+
+@pytest.mark.parametrize("U,bins,cap,d", [
+    (64, 8, 16, 32),
+    (33, 4, 8, 16),       # U not a multiple of the tile
+    (8, 2, 4, 8),
+    (300, 4, 128, 8),     # U > FUSED tile
+])
+def test_blob_unpack_fused_matches_ref(U, bins, cap, d):
+    buf = jax.random.normal(jax.random.key(4), (bins, cap, d))
+    slot = jax.random.randint(jax.random.key(5), (U,), 0, bins * cap)
+    valid = jax.random.bernoulli(jax.random.key(6), 0.8, (U,))
+    ref = blob_unpack_ref(buf, slot, valid)
+    out = blob_unpack_fused_pallas(buf, slot, valid, interpret=True)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+def test_fused_pack_unpack_roundtrip():
+    """Fused-kernel Batcher→Debatcher roundtrip (no drops)."""
+    x = jax.random.normal(jax.random.key(7), (40, 16))
+    keys = jax.random.randint(jax.random.key(8), (40,), 0, 4)
+    buf, _ = blob_pack_fused(x, keys, num_bins=4, capacity=64,
+                             use_pallas=True)
+    back = unpack_from_keys(buf, keys, num_bins=4, capacity=64,
+                            use_pallas=True)
     np.testing.assert_allclose(np.asarray(back), np.asarray(x), atol=1e-6)
 
 
