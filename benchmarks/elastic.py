@@ -1,0 +1,197 @@
+"""Elasticity benchmarks: rebalance cost, exactly-once, and $ delta.
+
+Three scripted measurements over the cluster subsystem:
+
+  * **handoff** — the acceptance scenario: a worker joins mid-stream
+    (cooperative rebalance), then an original worker crashes
+    (reassignment). Verifies record-by-record bit-identical delivery
+    against a static-cluster run of the same workload, counts partitions
+    moved (sticky: join must move at most the new worker's fair share),
+    and compares p95 shuffle latency inside the rebalance windows
+    against steady state.
+  * **eager-vs-coop** — the same join in eager (stop-the-world) mode,
+    for the pause/replay contrast.
+  * **autoscale** — a load spike through ``simulate_elastic`` with the
+    lag/queue-driven autoscaler; reports the infra $ actually paid
+    (worker-seconds) against a static cluster provisioned for the peak
+    worker count the elastic run reached.
+
+Writes ``BENCH_elastic.json`` so CI can gate on: p95 during a
+cooperative rebalance <= 3x steady-state p95; zero lost and zero
+duplicated records across scale-out + crash; payload bit-identity.
+"""
+
+from __future__ import annotations
+
+import json
+from collections import Counter
+from typing import List, Tuple
+
+import numpy as np
+
+from repro.cluster import ElasticCluster
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,
+                        EngineConfig, Record, SimConfig, simulate_elastic)
+
+Row = Tuple[str, float, str]
+
+CFG = BlobShuffleConfig(batch_bytes=48 * 1024, max_interval_s=0.2,
+                        num_partitions=18, num_az=3)
+N_RECORDS = 4000
+RATE = 2500.0            # arrivals span N_RECORDS / RATE seconds
+N_INSTANCES = 4
+JOIN_T, CRASH_T = 0.4, 1.0
+WINDOW_GRACE_S = 0.4     # rebalance window extends past ended_at
+
+
+def _records(n=N_RECORDS, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Record(rng.bytes(8), rng.bytes(300), timestamp_us=i)
+            for i in range(n)]
+
+
+def _engine():
+    return AsyncShuffleEngine(
+        CFG, EngineConfig(commit_interval_s=0.1),
+        n_instances=N_INSTANCES, seed=7, exactly_once=True)
+
+
+def _multiset(eng):
+    return {p: sorted((bytes(r.key), bytes(r.value), r.timestamp_us)
+                      for r in rs)
+            for p, rs in eng.out.items() if rs}
+
+
+def _run(mode=None):
+    """mode None = static cluster; otherwise elastic join + crash."""
+    eng = _engine()
+    cluster = None
+    if mode is not None:
+        cluster = ElasticCluster(eng, mode=mode, heartbeat_timeout_s=0.15)
+        eng.loop.at(JOIN_T, cluster.add_worker)
+        cluster.crash_worker_at(CRASH_T, "w1")
+    for i, rec in enumerate(_records()):
+        eng.submit(i / RATE, rec)
+    metrics = eng.run()
+    return eng, cluster, metrics
+
+
+def _windowed_p95(metrics, events):
+    """(steady p95, rebalance-window p95) from timestamped latencies."""
+    lat = np.asarray(metrics.record_latencies)
+    times = np.asarray(metrics.record_latency_times)
+    windows = [(e.started_at, e.ended_at + WINDOW_GRACE_S)
+               for e in events if not e.superseded]
+    in_win = np.zeros(len(lat), dtype=bool)
+    for lo, hi in windows:
+        in_win |= (times >= lo) & (times <= hi)
+    steady = lat[~in_win]
+    during = lat[in_win]
+    p95_steady = float(np.percentile(steady, 95)) if steady.size \
+        else float(np.percentile(lat, 95))
+    p95_during = float(np.percentile(during, 95)) if during.size \
+        else p95_steady
+    return p95_steady, p95_during
+
+
+def _diff_counts(static_ms, elastic_ms):
+    """(lost, duplicated) record counts, elastic vs static multiset."""
+    lost = dup = 0
+    for p in set(static_ms) | set(elastic_ms):
+        a = static_ms.get(p, [])
+        b = elastic_ms.get(p, [])
+        ca, cb = Counter(a), Counter(b)
+        lost += sum((ca - cb).values())
+        dup += sum((cb - ca).values())
+    return lost, dup
+
+
+def run() -> List[Row]:
+    rows: List[Row] = []
+    result = {}
+
+    # -- handoff: static baseline vs cooperative join + crash -------------
+    static_eng, _, static_m = _run(None)
+    coop_eng, coop, coop_m = _run("cooperative")
+    static_ms, coop_ms = _multiset(static_eng), _multiset(coop_eng)
+    lost, dup = _diff_counts(static_ms, coop_ms)
+    events = [e for e in coop.rebalancer.events if not e.superseded]
+    p95_steady, p95_rebalance = _windowed_p95(coop_m, events)
+    join_moved = len(events[0].moved) if events else 0
+    fair_share = -(-CFG.num_partitions // (N_INSTANCES + 1))
+    result.update({
+        "records": N_RECORDS,
+        "payload_bit_identical": static_ms == coop_ms,
+        "records_lost": lost,
+        "records_duplicated": dup,
+        "duplicates_delivered": coop_m.duplicates_delivered,
+        "records_replayed": coop_m.records_replayed,
+        "p95_steady_s": p95_steady,
+        "p95_rebalance_s": p95_rebalance,
+        "p95_ratio": p95_rebalance / p95_steady if p95_steady else 1.0,
+        "partitions_moved_join": join_moved,
+        "join_fair_share": fair_share,
+        "partitions_moved_total": coop.rebalancer.partitions_moved,
+        "replayed_entries": coop.stats.replayed_entries,
+        "handoff_duplicates_dropped":
+            coop.stats.handoff_duplicates_dropped,
+        "cache_reroutes": coop.stats.cache_reroutes,
+    })
+    rows.append(("elastic.handoff", coop_m.makespan_s * 1e6,
+                 f"bit_identical={result['payload_bit_identical']} "
+                 f"lost={lost} dup={dup} "
+                 f"p95_ratio={result['p95_ratio']:.2f} "
+                 f"moved_join={join_moved}<= {fair_share} "
+                 f"replayed={coop.stats.replayed_entries}"))
+
+    # -- eager contrast ----------------------------------------------------
+    eager_eng, eager, eager_m = _run("eager")
+    e_lost, e_dup = _diff_counts(static_ms, _multiset(eager_eng))
+    result.update({
+        "eager_records_lost": e_lost,
+        "eager_records_duplicated": e_dup,
+        "eager_undeliverable": eager.stats.undeliverable,
+        "eager_replayed_entries": eager.stats.replayed_entries,
+    })
+    rows.append(("elastic.eager", eager_m.makespan_s * 1e6,
+                 f"lost={e_lost} dup={e_dup} "
+                 f"undeliverable={eager.stats.undeliverable} "
+                 f"replayed={eager.stats.replayed_entries}"))
+
+    # -- autoscale: spike, $ vs static peak provisioning -------------------
+    cfg = SimConfig(n_nodes=2, inst_per_node=2, partitions_factor=3,
+                    duration_s=3.0, max_interval_s=0.25,
+                    commit_interval_s=0.25, seed=3)
+    eng, cluster, s = simulate_elastic(cfg, scale=0.001, spike_factor=3.0)
+    peak = max([d.workers_after for d in cluster.autoscaler.decisions],
+               default=len(cluster.membership.alive()))
+    hourly = cluster.autoscaler.policy.worker_cost_per_hour
+    static_infra = peak * eng.loop.now / 3600.0 * hourly
+    elastic_infra = s["infra_cost_usd"]
+    result.update({
+        "autoscale_decisions": [
+            {"t": d.t, "action": d.action, "workers": d.workers_after,
+             "reason": d.reason}
+            for d in cluster.autoscaler.decisions],
+        "autoscale_peak_workers": peak,
+        "autoscale_lag_final": s["lag_final"],
+        "autoscale_duplicates": eng.metrics.duplicates_delivered,
+        "cost_usd_static_infra": static_infra,
+        "cost_usd_elastic_infra": elastic_infra,
+        "cost_delta_usd": static_infra - elastic_infra,
+    })
+    rows.append(("elastic.autoscale", eng.loop.now * 1e6,
+                 f"peak={peak} decisions="
+                 f"{len(cluster.autoscaler.decisions)} "
+                 f"$static={static_infra:.4f} $elastic={elastic_infra:.4f} "
+                 f"saved={static_infra - elastic_infra:.4f}"))
+
+    with open("BENCH_elastic.json", "w") as f:
+        json.dump(result, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

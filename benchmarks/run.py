@@ -28,11 +28,29 @@ def _dryrun_summary(out_dir="results/dryrun"):
     return rows
 
 
+SUITES = {
+    "all": "every suite below",
+    "paper": "paper figure/table reproductions (Figs. 5-9 + model)",
+    "async": "async engine latency/cost sweeps",
+    "tiers": "storage-tier sweep (S3 Standard / Express / faulty)",
+    "micro": "data-plane microbenchmarks (writes BENCH_micro.json)",
+    "elastic": "elasticity: rebalance, exactly-once handoff, autoscale "
+               "(writes BENCH_elastic.json)",
+    "tpu": "TPU shuffle adaptation",
+    "kernels": "Pallas kernel microbenchmarks",
+    "dryrun": "roofline summary of results/dryrun",
+}
+
+
 def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--suite", default="all",
-                    choices=["all", "paper", "async", "tiers", "tpu",
-                             "kernels", "dryrun", "micro"])
+    ap = argparse.ArgumentParser(
+        description=__doc__,
+        formatter_class=argparse.RawDescriptionHelpFormatter,
+        epilog="suites:\n" + "\n".join(
+            f"  {name:<8} {desc}" for name, desc in SUITES.items()))
+    ap.add_argument("--suite", default="all", choices=sorted(SUITES),
+                    metavar="SUITE",
+                    help="one of: " + ", ".join(SUITES) + " (default: all)")
     args = ap.parse_args()
 
     rows = []
@@ -45,6 +63,9 @@ def main() -> None:
     if args.suite in ("all", "tiers"):
         from benchmarks import tier_sweep
         rows += tier_sweep.run()
+    if args.suite in ("all", "elastic"):
+        from benchmarks import elastic
+        rows += elastic.run()  # also writes BENCH_elastic.json
     if args.suite in ("all", "paper"):
         from benchmarks import paper_figs as F
         rows += F.fig5_latency_cdf()

@@ -1,0 +1,106 @@
+"""Elastic BlobShuffle demo: scale-out under a spike, crash recovery,
+and AZ outage — with exactly-once delivery verified record by record.
+
+Runs three scripted scenarios on the virtual clock:
+
+  1. join + crash (cooperative): a worker joins mid-stream, an original
+     worker crashes — output is compared bit-for-bit against a static
+     cluster run of the identical workload;
+  2. the same join in eager (stop-the-world) mode, showing the pause;
+  3. a 3x load spike through the lag/queue-driven autoscaler, with the
+     infra $ actually paid vs a statically peak-provisioned cluster.
+
+Usage:  python examples/elastic_shuffle_demo.py
+"""
+
+import numpy as np
+
+from repro.cluster import ElasticCluster
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,
+                        EngineConfig, Record, SimConfig, simulate_elastic)
+
+CFG = BlobShuffleConfig(batch_bytes=48 * 1024, max_interval_s=0.2,
+                        num_partitions=18, num_az=3)
+
+
+def records(n=4000, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Record(rng.bytes(8), rng.bytes(300), timestamp_us=i)
+            for i in range(n)]
+
+
+def engine():
+    return AsyncShuffleEngine(CFG, EngineConfig(commit_interval_s=0.1),
+                              n_instances=4, seed=7, exactly_once=True)
+
+
+def multiset(eng):
+    return {p: sorted((bytes(r.key), bytes(r.value), r.timestamp_us)
+                      for r in rs)
+            for p, rs in eng.out.items() if rs}
+
+
+def run(mode=None):
+    eng = engine()
+    cluster = None
+    if mode is not None:
+        cluster = ElasticCluster(eng, mode=mode, heartbeat_timeout_s=0.15)
+        eng.loop.at(0.4, cluster.add_worker)
+        cluster.crash_worker_at(1.0, "w1")
+    for i, rec in enumerate(records()):
+        eng.submit(i / 2500.0, rec)
+    return eng, cluster, eng.run()
+
+
+def main():
+    print("=== 1. cooperative join + crash vs static baseline ===")
+    static_eng, _, sm = run(None)
+    eng, cl, m = run("cooperative")
+    print(f"  static : {sm.records_delivered} records, "
+          f"makespan={sm.makespan_s:.2f}s p95={sm.latency_p(95):.3f}s")
+    print(f"  elastic: {m.records_delivered} records, "
+          f"makespan={m.makespan_s:.2f}s p95={m.latency_p(95):.3f}s, "
+          f"{m.records_replayed} replayed after the crash")
+    for e in cl.rebalancer.events:
+        if e.superseded:
+            continue
+        print(f"  rebalance[{e.reason}/{e.mode}] t={e.started_at:.2f}s"
+              f"->{e.ended_at:.2f}s moved={len(e.moved)} "
+              f"replayed={e.replayed} log entries")
+    ok = multiset(eng) == multiset(static_eng)
+    print(f"  exactly-once, bit-identical payload multiset: {ok}")
+    print(f"  cache entries re-routed (never flushed): "
+          f"{cl.stats.cache_reroutes}")
+    assert ok and m.duplicates_delivered == 0
+
+    print("\n=== 2. the same join, eager (stop-the-world) ===")
+    eng2, cl2, m2 = run("eager")
+    print(f"  delivered={m2.records_delivered} "
+          f"makespan={m2.makespan_s:.2f}s")
+    print(f"  entries that found no owner during the barrier: "
+          f"{cl2.stats.undeliverable} (replayed on resume: "
+          f"{cl2.stats.replayed_entries})")
+    assert multiset(eng2) == multiset(static_eng)
+
+    print("\n=== 3. load spike through the autoscaler ===")
+    cfg = SimConfig(n_nodes=2, inst_per_node=2, partitions_factor=3,
+                    duration_s=3.0, max_interval_s=0.25,
+                    commit_interval_s=0.25, seed=3)
+    eng3, cl3, s = simulate_elastic(cfg, scale=0.001, spike_factor=3.0)
+    for d in cl3.autoscaler.decisions:
+        print(f"  t={d.t:5.2f}s {d.action:<9} -> {d.workers_after} workers"
+              f"  ({d.reason})")
+    peak = max([d.workers_after for d in cl3.autoscaler.decisions],
+               default=4)
+    hourly = cl3.autoscaler.policy.worker_cost_per_hour
+    static_cost = peak * eng3.loop.now / 3600.0 * hourly
+    print(f"  lag drained to {s['lag_final']:.0f}; "
+          f"infra $ {s['infra_cost_usd']:.4f} elastic vs "
+          f"{static_cost:.4f} static-at-peak "
+          f"({100 * (1 - s['infra_cost_usd'] / static_cost):.0f}% saved)")
+    assert eng3.metrics.duplicates_delivered == 0
+    print("\nOK")
+
+
+if __name__ == "__main__":
+    main()

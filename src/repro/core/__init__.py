@@ -31,4 +31,4 @@ from repro.core.costs import (AwsPrices, TierPrices, TIERS,
                               blobshuffle_cost_per_hour,
                               kafka_shuffle_cost_per_hour)
 from repro.core.simulator import (SimConfig, SimResult, simulate,
-                                  simulate_async)
+                                  simulate_async, simulate_elastic)

@@ -27,6 +27,7 @@ class CacheStats:
     evictions: int = 0
     insertions: int = 0
     store_gets: int = 0      # store GETs this cluster led (misses it filled)
+    reroutes: int = 0        # entries moved owner-to-owner on resize
 
     @property
     def requests(self) -> int:
@@ -110,7 +111,53 @@ class DistributedCache:
         return self.stats.store_gets
 
     def owner_of(self, blob_id: str) -> int:
-        return stable_hash64(blob_id.encode()) % len(self.members)
+        """Rendezvous (highest-random-weight) routing: the owner is the
+        member with the highest hash(blob, member). Unlike mod-N, growing
+        or shrinking the member set re-routes only the minimal share of
+        keys — the property ``resize`` relies on during rebalances."""
+        n = len(self.members)
+        if n == 1:
+            return 0
+        key = blob_id.encode()
+        best, owner = -1, 0
+        for m in range(n):
+            w = stable_hash64(key + bytes((m & 0xFF, (m >> 8) & 0xFF)))
+            if w > best:
+                best, owner = w, m
+        return owner
+
+    def resize(self, n_members: int) -> int:
+        """Change the member count WITHOUT flushing: every cached payload
+        is re-routed to its new rendezvous owner (entries on surviving
+        members that keep their owner do not move at all). Called by the
+        cluster layer when a rebalance changes the per-AZ worker set; the
+        moved count lands in ``stats.reroutes``."""
+        n = max(1, int(n_members))
+        old = len(self.members)
+        if n == old:
+            return 0
+        cap = self.members[0].capacity
+        if n > old:
+            self.members.extend(LRUCache(cap) for _ in range(n - old))
+            removed: List[LRUCache] = []
+        else:
+            removed = self.members[n:]
+            del self.members[n:]
+        moved = 0
+        for idx, m in enumerate(self.members):
+            stale = [(k, own) for k in m.entries
+                     if (own := self.owner_of(k)) != idx]
+            for key, own in stale:
+                payload = m.entries.pop(key)
+                m.size -= len(payload)
+                self.members[own].put(key, payload)
+                moved += 1
+        for m in removed:
+            for key, payload in m.entries.items():
+                self.members[self.owner_of(key)].put(key, payload)
+                moved += 1
+        self.stats.reroutes += moved
+        return moved
 
     def write(self, blob_id: str, payload: bytes, now: float = 0.0) -> float:
         """Write path: member uploads to the store; optionally caches."""

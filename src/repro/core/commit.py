@@ -47,6 +47,15 @@ class CommitCoordinator:
         # start time of a commit waiting for them to drain (None = idle)
         self.outstanding: Set[str] = set()
         self._commit_started: Optional[float] = None
+        # snapshot of the commit in progress: the uploads it waits for,
+        # the notifications it will publish, and how many uncommitted
+        # source units it covers — uploads/records arriving later belong
+        # to the NEXT commit, so a commit finishes in bounded time even
+        # under continuous load
+        self._commit_wait: Set[str] = set()
+        self._commit_notes: List[Notification] = []
+        self._commit_n: int = 0
+        self._commit_again: bool = False
 
     def process(self, rec: Record, now: float) -> None:
         self.uncommitted.append(rec)
@@ -76,12 +85,17 @@ class CommitCoordinator:
         return blocked
 
     # -- event-driven commit protocol (async engine path) -------------------
-    # Notifications of in-flight uploads reach ``unpublished`` only at the
+    # Notifications of in-flight uploads reach the coordinator only at the
     # upload's completion event; a commit therefore happens in two halves:
     # ``begin_commit`` flushes the buffers (enqueueing the tail uploads)
-    # and ``try_finish_commit`` completes once ``outstanding`` drains —
-    # publishing everything at once, which is the read-committed visibility
-    # that preserves exactly-once under reordering and replay.
+    # and SNAPSHOTS what this commit covers; ``try_finish_commit``
+    # completes once the snapshot's uploads drain — publishing the
+    # snapshot's notifications at once (read-committed visibility, which
+    # preserves exactly-once under reordering and replay). Work arriving
+    # after ``begin_commit`` belongs to the NEXT commit (chained
+    # automatically), so commits finish in bounded time even while the
+    # source keeps producing — Kafka Streams' commit covers records
+    # processed up to the commit point, not future ones.
     def note_upload_started(self, blob_id: str) -> None:
         self.outstanding.add(blob_id)
 
@@ -91,34 +105,57 @@ class CommitCoordinator:
         """Record a durable upload. ``publish_now`` is the at-least-once
         mode: notifications fan out immediately (a crash after this point
         produces duplicates downstream); exactly-once defers them to the
-        next commit."""
+        commit covering the upload."""
         self.outstanding.discard(blob_id)
+        in_commit = blob_id in self._commit_wait
+        self._commit_wait.discard(blob_id)
         if publish_now:
             for note in notes:
                 self.publish(note)
+        elif in_commit:
+            self._commit_notes.extend(notes)
         else:
             self.unpublished.extend(notes)
 
+    def note_upload_aborted(self, blob_id: str) -> None:
+        """A PUT failed permanently: stop waiting for it (the loss shows
+        up in the engine's ``uploads_aborted``, not as a hung commit)."""
+        self.outstanding.discard(blob_id)
+        self._commit_wait.discard(blob_id)
+
     def begin_commit(self, now: float) -> None:
         """First half of an async commit: flush buffers into the upload
-        lane. If a commit is already waiting, the new one merges with it
-        (its notifications ride along when ``outstanding`` drains)."""
+        lane and snapshot the uploads/notifications/records this commit
+        covers. If a commit is already in flight, remember to chain
+        another one when it finishes."""
         self.batcher.flush_all(now)
-        if self._commit_started is None:
-            self._commit_started = now
+        if self._commit_started is not None:
+            self._commit_again = True
+            return
+        self._commit_started = now
+        self._commit_wait = set(self.outstanding)
+        self._commit_notes = list(self.unpublished)
+        self.unpublished.clear()
+        self._commit_n = len(self.uncommitted)
 
     def try_finish_commit(self, now: float) -> bool:
-        """Second half: once every outstanding upload is durable, publish
-        the batch of notifications and mark the offsets committed."""
-        if self._commit_started is None or self.outstanding:
+        """Second half: once every upload in the commit's snapshot is
+        durable, publish its notifications and mark its offsets
+        committed. Chains the next commit if more work accumulated."""
+        if self._commit_started is None or self._commit_wait:
             return False
-        for note in self.unpublished:
+        for note in self._commit_notes:
             self.publish(note)
-        self.unpublished.clear()
-        self.uncommitted.clear()
+        self._commit_notes = []
+        del self.uncommitted[:self._commit_n]
+        self._commit_n = 0
         self.stats.commits += 1
         self.stats.commit_block_s += now - self._commit_started
         self._commit_started = None
+        if self._commit_again or self.outstanding or self.unpublished:
+            self._commit_again = False
+            self.begin_commit(now)
+            self.try_finish_commit(now)
         return True
 
     def fail_and_restart(self, now: float) -> List[Record]:
@@ -142,4 +179,8 @@ class CommitCoordinator:
         self.uncommitted.clear()
         self.outstanding.clear()
         self._commit_started = None
+        self._commit_wait.clear()
+        self._commit_notes.clear()
+        self._commit_n = 0
+        self._commit_again = False
         return replay

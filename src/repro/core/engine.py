@@ -70,6 +70,10 @@ class EngineConfig:
     fetch_parallelism: int = 8         # in-flight GETs per AZ Debatcher
     commit_interval_s: Optional[float] = None  # None: commit on drain only
     notification_latency_s: float = 0.002      # messaging-layer delay
+    # extra delay for a notification whose producer and consumer sit in
+    # different AZs (mirrors the cross-AZ penalties of stores/express.py);
+    # 0.0 keeps the legacy uniform-latency behavior bit-identical
+    cross_az_notification_extra_s: float = 0.0
     cache_fill_latency_s: float = 0.001        # write-through fill delay
     rpc_latency_s: float = 0.0005              # intra-AZ cache RPC
     local_latency_s: float = 0.00005           # local-cache lookup
@@ -98,6 +102,11 @@ class ShuffleMetrics:
     duplicates_delivered: int = 0
     makespan_s: float = 0.0
     record_latencies: List[float] = dataclasses.field(default_factory=list)
+    # delivery (virtual) time of each latency sample, index-aligned with
+    # record_latencies — lets callers window percentiles (e.g. "p95 during
+    # the rebalance") without changing the latency list itself
+    record_latency_times: List[float] = dataclasses.field(
+        default_factory=list)
     put_latencies: List[float] = dataclasses.field(default_factory=list)
     get_latencies: List[float] = dataclasses.field(default_factory=list)
     # resilience counters
@@ -138,6 +147,10 @@ class _Fetch:
     enqueued_at: float
     attempt: int = 0
     done: bool = False      # set by the first completion (primary or hedge)
+    # cluster-mode provenance: the notification-log offset being delivered
+    # and the worker it was scheduled for (None on the direct fan-out path)
+    offset: Optional[int] = None
+    worker: Optional[str] = None
 
 
 class AsyncShuffleEngine:
@@ -166,28 +179,23 @@ class AsyncShuffleEngine:
             self.debatchers.append(
                 Debatcher(az, self.caches[az], local,
                           exactly_once=exactly_once))
+        # elastic-cluster hook: when an ``ElasticCluster`` is attached,
+        # notification fan-out routes through its durable log instead of
+        # the fixed-delay direct delivery, and instances can join/leave
+        self.cluster = None
+        # per-instance state: the instance set is DYNAMIC — every list
+        # below grows via add_instance() and entries deactivate (but are
+        # never removed, so indices stay stable) via remove_instance/_fail
         self.batchers: List[Batcher] = []
         self.coordinators: List[CommitCoordinator] = []
-        for i in range(n_instances):
-            az = i % cfg.num_az
-            b = Batcher(cfg, self.partition_to_az,
-                        lambda key: default_partitioner(
-                            key, cfg.num_partitions),
-                        self.caches[az], uploader=self._make_uploader(i),
-                        name=f"i{i}",
-                        partitioner_batch=lambda batch: (
-                            default_partitioner_batch(
-                                batch, cfg.num_partitions)))
-            self.batchers.append(b)
-            self.coordinators.append(
-                CommitCoordinator(b, self.debatchers, self._publish))
-
+        self._inst_az: List[int] = []
+        self.active: List[bool] = []
         # producer side: per-instance bounded upload lanes
         # queue entries are (blob, notes, attempt)
-        self._upload_q: List[Deque[Tuple[Blob, List[Notification], int]]] = \
-            [deque() for _ in range(n_instances)]
-        self._uploads_inflight = [0] * n_instances
-        self._epoch = [0] * n_instances    # bumped on failure injection
+        self._upload_q: List[Deque[Tuple[Blob, List[Notification], int]]] = []
+        self._uploads_inflight: List[int] = []
+        self._epoch: List[int] = []        # bumped on failure injection
+        self._upload_penalty: List[float] = []
         # consumer side: per-AZ fetch queues + single-flight tracking
         self._fetch_q: List[Deque[_Fetch]] = [deque()
                                               for _ in range(cfg.num_az)]
@@ -196,7 +204,6 @@ class AsyncShuffleEngine:
         # presence marks a leader in flight (kept across leader retries)
         self._get_waiters: Dict[Tuple[int, str], List[_Fetch]] = {}
         # throttle backpressure: lane parallelism collapses to 1 until t
-        self._upload_penalty = [0.0] * n_instances
         self._fetch_penalty = [0.0] * cfg.num_az
         # deterministic jitter for retry backoff (separate stream from the
         # store's latency RNG so adding retries never perturbs latencies)
@@ -214,21 +221,86 @@ class AsyncShuffleEngine:
         self.out: Dict[int, List[Record]] = defaultdict(list)
         self.published: List[Notification] = []
         self.metrics = ShuffleMetrics()
+        for _ in range(n_instances):
+            self.add_instance()
 
     def partition_to_az(self, partition: int) -> int:
         return partition % self.cfg.num_az
+
+    # -- elastic instance set ---------------------------------------------
+    def add_instance(self, az: Optional[int] = None) -> int:
+        """Provision one more batcher instance (elastic scale-out). The
+        new instance joins the ingest round-robin immediately; its AZ
+        defaults to the round-robin AZ layout. Returns the instance id."""
+        cfg = self.cfg
+        i = len(self.batchers)
+        if az is None:
+            az = i % cfg.num_az
+        self._inst_az.append(az)
+        self.active.append(True)
+        b = Batcher(cfg, self.partition_to_az,
+                    lambda key: default_partitioner(
+                        key, cfg.num_partitions),
+                    self.caches[az], uploader=self._make_uploader(i),
+                    name=f"i{i}",
+                    partitioner_batch=lambda batch: (
+                        default_partitioner_batch(
+                            batch, cfg.num_partitions)))
+        self.batchers.append(b)
+        self.coordinators.append(
+            CommitCoordinator(b, self.debatchers, self._make_publisher(i)))
+        self._upload_q.append(deque())
+        self._uploads_inflight.append(0)
+        self._epoch.append(0)
+        self._upload_penalty.append(0.0)
+        self.n_instances = len(self.batchers)
+        return i
+
+    def remove_instance(self, i: int) -> None:
+        """Gracefully drain instance ``i`` (elastic scale-in): it leaves
+        the ingest round-robin now, flushes its buffers, and commits once
+        its outstanding uploads are durable."""
+        self.active[i] = False
+        c = self.coordinators[i]
+        c.begin_commit(self.loop.now)
+        if c.try_finish_commit(self.loop.now):
+            self._t_done = max(self._t_done, self.loop.now)
+
+    def attach_cluster(self, cluster) -> None:
+        self.cluster = cluster
+
+    def _make_publisher(self, i: int) -> Callable[[Notification], None]:
+        def publish(note: Notification) -> None:
+            self._publish(note, i)
+        return publish
+
+    def _next_inst(self) -> int:
+        n = self.n_instances
+        for _ in range(n):
+            i = self._rr
+            self._rr = (self._rr + 1) % n
+            if self.active[i]:
+                return i
+        return self._rr    # no active instance left: route anywhere
 
     # -- ingest -----------------------------------------------------------
     def submit(self, t: float, rec: Record,
                inst: Optional[int] = None) -> None:
         """Schedule one source record to arrive at instance ``inst`` (or
-        round-robin) at virtual time ``t``."""
-        if inst is None:
-            inst = self._rr
-            self._rr = (self._rr + 1) % self.n_instances
+        round-robin over the instances ACTIVE at arrival time) at virtual
+        time ``t``."""
         self._pending_ingests += 1
         self.metrics.records_in += 1
-        self.loop.at(t, self._ingest, inst, rec)
+        if inst is not None:
+            self.loop.at(t, self._ingest, inst, rec)
+        else:
+            self.loop.at(t, self._ingest_rr, rec)
+
+    def _ingest_rr(self, rec: Record) -> None:
+        # the instance is picked when the record ARRIVES, not when it was
+        # scheduled — a load balancer routes around left/crashed instances
+        # and onto ones that joined mid-stream
+        self._ingest(self._next_inst(), rec)
 
     def _ingest(self, i: int, rec: Record) -> None:
         now = self.loop.now
@@ -252,15 +324,13 @@ class AsyncShuffleEngine:
         time (for end-to-end latency accounting); the batch itself is
         processed when it is delivered at ``t``, like an upstream consumer
         poll that hands over one micro-batch."""
-        if inst is None:
-            inst = self._rr
-            self._rr = (self._rr + 1) % self.n_instances
         self._pending_ingests += len(batch)
         self.metrics.records_in += len(batch)
         self.loop.at(t, self._ingest_batch, inst, batch, times)
 
-    def _ingest_batch(self, i: int, batch: RecordBatch,
+    def _ingest_batch(self, inst: Optional[int], batch: RecordBatch,
                       times: Optional[np.ndarray]) -> None:
+        i = self._next_inst() if inst is None else inst
         now = self.loop.now
         n = len(batch)
         if n == 0:
@@ -356,7 +426,7 @@ class AsyncShuffleEngine:
 
     def _start_put(self, i: int, blob: Blob, notes: List[Notification],
                    attempt: int) -> None:
-        az = i % self.cfg.num_az
+        az = self._inst_az[i]
         try:
             lat = self.store.begin_put(blob.blob_id, blob.size,
                                        now=self.loop.now, az=az)
@@ -381,7 +451,7 @@ class AsyncShuffleEngine:
             # loss is visible in uploads_aborted and records_delivered)
             self.metrics.uploads_aborted += 1
             c = self.coordinators[i]
-            c.outstanding.discard(blob.blob_id)
+            c.note_upload_aborted(blob.blob_id)
             if c.try_finish_commit(self.loop.now):
                 self._t_done = max(self._t_done, self.loop.now)
         else:
@@ -404,7 +474,7 @@ class AsyncShuffleEngine:
             return  # instance crashed mid-upload: connection died with it
         now = self.loop.now
         self.store.finish_put(blob.blob_id, blob.payload, now,
-                              az=i % self.cfg.num_az)
+                              az=self._inst_az[i])
         self.metrics.put_latencies.append(lat)
         self._uploads_inflight[i] -= 1
         if self.cfg.cache_on_write:
@@ -412,7 +482,7 @@ class AsyncShuffleEngine:
             # same-AZ consumers hit it; cross-AZ consumers still lead one
             # store GET into their own cluster (model's 2/3 GET ratio)
             self.loop.after(self.ecfg.cache_fill_latency_s,
-                            self.caches[i % self.cfg.num_az].fill,
+                            self.caches[self._inst_az[i]].fill,
                             blob.blob_id, blob.payload)
         c = self.coordinators[i]
         c.note_upload_complete(blob.blob_id, notes,
@@ -422,16 +492,43 @@ class AsyncShuffleEngine:
         self._pump_uploads(i)
 
     # -- notification fan-out + prefetching fetch lane --------------------
-    def _publish(self, note: Notification) -> None:
+    def _publish(self, note: Notification, inst: Optional[int] = None) -> None:
         self.published.append(note)
-        self.loop.after(self.ecfg.notification_latency_s, self._notify,
-                        note)
+        if self.cluster is not None:
+            # elastic mode: the notification becomes a durable log entry
+            # and is delivered to the partition's current OWNER (which may
+            # sit in any AZ) — or replayed later if ownership is in flux
+            self.cluster.publish(
+                note, None if inst is None else self._inst_az[inst])
+            return
+        delay = self.ecfg.notification_latency_s
+        if (inst is not None
+                and self._inst_az[inst] != note.target_az):
+            delay += self.ecfg.cross_az_notification_extra_s
+        self.loop.after(delay, self._notify, note)
 
     def _notify(self, note: Notification) -> None:
         az = note.target_az
         if not self.debatchers[az].begin(note):
             return  # duplicate claimed/dropped before any fetch is issued
         self._fetch_q[az].append(_Fetch(note, self.loop.now))
+        self._pump_fetches(az)
+
+    def cluster_deliver(self, az: int, note: Notification, offset: int,
+                        worker: str) -> None:
+        """Cluster-mode delivery of one notification-log entry to the
+        owning worker's AZ fetch lane. Dedup moves from
+        ``Debatcher.begin`` (claim-on-admit) to delivery completion
+        (``ElasticCluster.on_delivery`` — by log offset AND (blob,
+        partition)): a crashed owner's claimed-but-undelivered entries
+        must REPLAY to the next owner instead of being dropped."""
+        if (self.cluster is not None
+                and not self.cluster.membership.is_alive_now(worker)):
+            self.cluster.stats.stale_drops += 1
+            return      # the owner died in transit: replay covers this
+        self.debatchers[az].stats.notifications += 1
+        self._fetch_q[az].append(_Fetch(note, self.loop.now, offset=offset,
+                                        worker=worker))
         self._pump_fetches(az)
 
     def _pump_fetches(self, az: int) -> None:
@@ -579,6 +676,14 @@ class AsyncShuffleEngine:
     def _fetch_done(self, az: int, f: _Fetch, payload: bytes,
                     src: str) -> None:
         now = self.loop.now
+        if f.offset is not None:
+            # cluster mode: the delivery point is the exactly-once gate —
+            # stale owners (crashed/reassigned mid-fetch) and replayed
+            # duplicates are dropped here, releasing the lane slot
+            if not self.cluster.on_delivery(f.note, f.offset, f.worker):
+                self._fetch_inflight[az] -= 1
+                self._pump_fetches(az)
+                return
         d = self.debatchers[az]
         if d.local is not None and src != "local":
             d.local.fill(f.note.blob_id, payload)
@@ -593,6 +698,7 @@ class AsyncShuffleEngine:
         else:
             for t0 in arrivals:
                 self.metrics.record_latencies.append(now - t0)
+                self.metrics.record_latency_times.append(now)
         self._t_done = max(self._t_done, now)
         self._fetch_inflight[az] -= 1
         self._pump_fetches(az)
@@ -608,9 +714,17 @@ class AsyncShuffleEngine:
                     and not c.unpublished and not c.uncommitted
                     and c._commit_started is None):
                 continue    # nothing to commit: don't extend the makespan
+            if c._commit_started is not None and not c.uncommitted \
+                    and c.batcher.buffered_bytes() == 0:
+                continue    # in-flight commit already covers everything
             c.begin_commit(now)
             if c.try_finish_commit(now):
                 self._t_done = max(self._t_done, now)
+        if self.cluster is not None:
+            # consumer-group offsets commit on the same cadence as the
+            # engine's commit protocol (Kafka Streams commits source and
+            # consumer offsets inside one commit)
+            self.cluster.commit_offsets(now)
 
     def _commit_tick(self, interval: float) -> None:
         self._commit_all()
@@ -637,16 +751,20 @@ class AsyncShuffleEngine:
         if self._work_pending():
             self.loop.after(interval, self._retention_tick, interval)
 
-    def fail_at(self, t: float, inst: int) -> None:
+    def fail_at(self, t: float, inst: int, permanent: bool = False) -> None:
         """Inject a crash of ``inst`` at time ``t``: queued/in-flight
-        uploads and buffers are lost, uncommitted records replay."""
-        self.loop.at(t, self._fail, inst)
+        uploads and buffers are lost, uncommitted records replay.
+        ``permanent`` removes the instance from the round-robin (the
+        elastic-cluster fail-stop model) instead of restarting it."""
+        self.loop.at(t, self._fail, inst, permanent)
 
-    def _fail(self, i: int) -> None:
+    def _fail(self, i: int, permanent: bool = False) -> None:
         now = self.loop.now
         self._epoch[i] += 1
         self._upload_q[i].clear()
         self._uploads_inflight[i] = 0
+        if permanent:
+            self.active[i] = False
         replay = self.coordinators[i].fail_and_restart(now)
         for key in [k for k in self._arrivals if k[0] == i]:
             self._arrivals[key].clear()   # buffered records were lost
@@ -665,6 +783,8 @@ class AsyncShuffleEngine:
         if rs:
             self.loop.after(rs, self._retention_tick, rs)
         self.loop.run(until)
+        if self.cluster is not None:
+            self.cluster.finalize(self.loop.now)
         # storage-cost correctness: fold still-live objects into the
         # byte·seconds integral so cost_usd(explicit_storage=True) is
         # exact even when nothing expired within the run

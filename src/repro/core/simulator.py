@@ -27,7 +27,7 @@ from repro.core.costs import (AwsPrices,
                               kafka_shuffle_cost_per_hour)
 from repro.core.engine import AsyncShuffleEngine, EngineConfig
 from repro.core.stores import BlobStore, LatencyModel, SimulatedS3
-from repro.core.workload import WorkloadConfig, drive
+from repro.core.workload import WorkloadConfig, drive, generate
 
 MiB = 1024 ** 2
 GiB = 1024 ** 3
@@ -125,6 +125,87 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
     drive(eng, wl, batch_records=ingest_batch_records)
     metrics = eng.run()
     return eng, metrics.summary(store)
+
+
+def simulate_elastic(cfg: SimConfig, *,
+                     engine_cfg: Optional[EngineConfig] = None,
+                     scale: float = 0.01, mode: str = "cooperative",
+                     autoscale: bool = True, policy=None,
+                     spike_factor: float = 3.0,
+                     phases: Optional[List[tuple]] = None,
+                     crash_at: Optional[float] = None,
+                     crash_worker: str = "w1",
+                     az_outage_at: Optional[float] = None,
+                     az_outage: int = 0,
+                     heartbeat_timeout_s: float = 0.25,
+                     exactly_once: bool = True,
+                     store: Optional[BlobStore] = None,
+                     max_sim_s: float = 10.0
+                     ) -> "tuple[AsyncShuffleEngine, object, dict]":
+    """Elastic scenario through the cluster subsystem: phased offered
+    load (default steady → ``spike_factor``× spike → steady, driving the
+    autoscaler), plus optional worker crash and AZ outage. Returns
+    (engine, cluster, summary) where the summary extends
+    ``simulate_async``'s with elasticity metrics (workers, rebalances,
+    partitions moved, replayed entries, infra $).
+
+    ``phases`` overrides the load shape: a list of ``(rate_factor,
+    duration_s)`` segments at the scaled base rate. Like
+    ``simulate_async``, the per-record simulation clamps the scenario to
+    ``max_sim_s`` seconds of virtual load — raise it explicitly for
+    long-horizon scenarios.
+    """
+    from repro.cluster import AutoscalePolicy, ElasticCluster
+    bcfg = BlobShuffleConfig(
+        batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
+        max_interval_s=cfg.max_interval_s,
+        num_partitions=cfg.partitions, num_az=cfg.n_az,
+        cache_on_write=cfg.cache_on_write)
+    base_rate = cfg.offered_gib_s * GiB * scale / cfg.record_bytes
+    duration = min(cfg.duration_s, max_sim_s)
+    if phases is None:
+        phases = [(1.0, 0.3 * duration), (spike_factor, 0.4 * duration),
+                  (1.0, 0.3 * duration)]
+    if store is None:
+        store = SimulatedS3(latency=LatencyModel(), seed=cfg.seed)
+    eng = AsyncShuffleEngine(
+        bcfg, engine_cfg or EngineConfig(
+            commit_interval_s=min(cfg.commit_interval_s, 1.0)),
+        n_instances=cfg.n_inst, store=store, seed=cfg.seed,
+        exactly_once=exactly_once)
+    cluster = ElasticCluster(
+        eng, mode=mode, heartbeat_timeout_s=heartbeat_timeout_s,
+        autoscale=(policy or AutoscalePolicy()) if autoscale else None)
+    t0 = 0.0
+    for k, (factor, dur) in enumerate(phases):
+        wl = WorkloadConfig(arrival_rate=base_rate * factor,
+                            duration_s=dur,
+                            record_bytes=cfg.record_bytes,
+                            seed=cfg.seed + k)
+        for t, rec in generate(wl):
+            eng.submit(t0 + t, rec)
+        t0 += dur
+    if crash_at is not None:
+        cluster.crash_worker_at(crash_at, crash_worker)
+    if az_outage_at is not None:
+        cluster.az_outage_at(az_outage_at, az_outage)
+    metrics = eng.run()
+    s = metrics.summary(store)
+    events = [e for e in cluster.rebalancer.events if not e.superseded]
+    s.update({
+        "workers_final": float(len(cluster.membership.alive())),
+        "rebalances": float(len(events)),
+        "partitions_moved": float(cluster.rebalancer.partitions_moved),
+        "replayed_entries": float(cluster.stats.replayed_entries),
+        "handoff_duplicates_dropped":
+            float(cluster.stats.handoff_duplicates_dropped),
+        "lag_final": float(cluster.total_lag()),
+        "infra_cost_usd": cluster.infra_cost_usd(),
+        "scale_decisions": float(
+            len(cluster.autoscaler.decisions) if cluster.autoscaler
+            else 0),
+    })
+    return eng, cluster, s
 
 
 def simulate(cfg: SimConfig, capacity: Optional[CapacityModel] = None,

@@ -16,7 +16,7 @@ from typing import Optional, Tuple
 
 import numpy as np
 
-from repro.core.store import LatencyModel
+from repro.core.stores import LatencyModel
 
 
 @dataclasses.dataclass

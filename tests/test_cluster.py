@@ -1,0 +1,339 @@
+"""Elastic cluster subsystem: notification log + consumer offsets,
+virtual-clock membership, sticky AZ-aware assignment, eager vs
+cooperative rebalance with exactly-once handoff, and autoscaling."""
+
+import numpy as np
+
+from repro.cluster import (AutoscalePolicy, ElasticCluster, Membership,
+                           NotificationLog, OffsetStore, PartitionMeta,
+                           StickyAzAssignor, WorkerInfo)
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,
+                        DistributedCache, EngineConfig, EventLoop, Record,
+                        SimConfig, SimulatedS3, simulate_elastic)
+from repro.core.blob import ByteRange, Notification
+
+CFG = BlobShuffleConfig(batch_bytes=48 * 1024, max_interval_s=0.2,
+                        num_partitions=18, num_az=3)
+
+
+def make_records(n, vsize=300, seed=11):
+    rng = np.random.default_rng(seed)
+    return [Record(rng.bytes(8), rng.bytes(vsize), timestamp_us=i)
+            for i in range(n)]
+
+
+def make_engine(n_instances=4, seed=7, ecfg=None):
+    return AsyncShuffleEngine(
+        CFG, ecfg or EngineConfig(commit_interval_s=0.1),
+        n_instances=n_instances, seed=seed, exactly_once=True)
+
+
+def submit_all(eng, recs, rate=2000.0):
+    for i, rec in enumerate(recs):
+        eng.submit(i / rate, rec)
+
+
+def out_multiset(eng):
+    return {p: sorted((bytes(r.key), bytes(r.value), r.timestamp_us)
+                      for r in rs)
+            for p, rs in eng.out.items() if rs}
+
+
+def note(partition, blob="b0", az=0):
+    return Notification(blob, partition, ByteRange(0, 10), az)
+
+
+# -- notification log + offsets --------------------------------------------
+
+def test_notification_log_offsets_are_dense_and_replayable():
+    log = NotificationLog()
+    assert log.end_offset(3) == 0
+    offs = [log.append(note(3, f"b{i}")) for i in range(5)]
+    assert offs == [0, 1, 2, 3, 4]
+    assert log.end_offset(3) == 5 and log.end_offset(4) == 0
+    assert [o for o, _ in log.read(3, 1, 3)] == [1, 2]
+    replayed = log.replay(3, 2)
+    assert [o for o, _ in replayed] == [2, 3, 4]
+    assert [n.blob_id for _, n in replayed] == ["b2", "b3", "b4"]
+    assert log.stats.replayed == 3 and log.stats.appends == 5
+
+
+def test_offset_store_commits_are_monotonic():
+    st = OffsetStore()
+    assert st.committed("g", 0) == 0
+    assert st.commit("g", 0, 5) and st.committed("g", 0) == 5
+    assert not st.commit("g", 0, 3)        # stale coordinator: rejected
+    assert st.committed("g", 0) == 5
+    assert st.committed("other", 0) == 0   # groups are independent
+
+
+# -- membership -------------------------------------------------------------
+
+def test_membership_crash_detected_one_timeout_later():
+    loop = EventLoop()
+    changes = []
+    m = Membership(loop, heartbeat_timeout_s=0.5,
+                   on_change=lambda k, w: changes.append(
+                       (loop.now, k, w.worker_id)))
+    m.join("a", 0, 0)
+    m.join("b", 1, 1)
+    loop.at(2.0, m.crash, "a")
+    loop.run()
+    # crash is silent at t=2: still in the group's alive() view, but
+    # ground truth knows; detection lands exactly one timeout later
+    assert (2.5, "crash", "a") in changes
+    assert [w.worker_id for w in m.alive()] == ["b"]
+    assert not m.is_alive_now("a") and m.is_alive_now("b")
+
+
+def test_membership_heartbeat_cancels_pending_detection():
+    loop = EventLoop()
+    changes = []
+    m = Membership(loop, heartbeat_timeout_s=0.5,
+                   on_change=lambda k, w: changes.append(k))
+    m.join("a", 0, 0)
+    loop.at(1.0, m.crash, "a")
+    loop.at(1.2, m.heartbeat, "a")   # recovered before the timeout
+    loop.run()
+    assert changes == ["join"]
+    assert m.is_alive_now("a")
+
+
+# -- sticky AZ-aware assignment ---------------------------------------------
+
+def mk_workers(azs):
+    return [WorkerInfo(f"w{i}", az=az, inst=i, joined_at=0.0)
+            for i, az in enumerate(azs)]
+
+
+def mk_parts(n, n_az=3):
+    return [PartitionMeta(p, p % n_az) for p in range(n)]
+
+
+def test_assignor_balances_and_aligns_with_home_az():
+    parts, workers = mk_parts(18), mk_workers([0, 1, 2, 0, 1, 2])
+    out = StickyAzAssignor().assign(parts, workers)
+    loads = {w.worker_id: 0 for w in workers}
+    by_id = {w.worker_id: w for w in workers}
+    for p in parts:
+        w = by_id[out[p.partition]]
+        loads[w.worker_id] += 1
+        assert w.az == p.home_az       # every partition lands in-home-AZ
+    assert set(loads.values()) == {3}  # perfectly balanced
+
+
+def test_assignor_join_moves_at_most_fair_share():
+    parts, workers = mk_parts(18), mk_workers([0, 1, 2, 0])
+    a = StickyAzAssignor()
+    first = a.assign(parts, workers)
+    joined = workers + [WorkerInfo("w4", az=1, inst=4, joined_at=1.0)]
+    second = a.assign(parts, joined, first)
+    moved = StickyAzAssignor.moved(first, second)
+    assert 0 < len(moved) <= -(-18 // 5)   # <= ceil(P / W') = fair share
+    assert any(second[p] == "w4" for p in moved)   # the join absorbs load
+    # unmoved partitions all kept their previous owner (stickiness)
+    assert all(second[p] == first[p] for p in first if p not in moved)
+
+
+def test_assignor_crash_reassigns_only_dead_workers_partitions():
+    parts, workers = mk_parts(18), mk_workers([0, 1, 2, 0, 1, 2])
+    a = StickyAzAssignor()
+    first = a.assign(parts, workers)
+    workers[1].state = "crashed"
+    second = a.assign(parts, workers, first)
+    for p, w in second.items():
+        if first[p] != "w1":
+            assert w == first[p]       # survivors keep their partitions
+        else:
+            assert w != "w1"
+    assert "w1" not in second.values()
+
+
+def test_assignor_az_outage_falls_back_cross_az():
+    parts = mk_parts(18)
+    workers = mk_workers([0, 1, 2, 0, 1, 2])
+    for w in workers:
+        if w.az == 0:
+            w.state = "crashed"        # whole AZ 0 gone
+    out = StickyAzAssignor().assign(parts, workers)
+    assert len(out) == 18              # nothing is left unowned
+    by_id = {w.worker_id: w for w in workers}
+    cross = [p for p in parts if by_id[out[p.partition]].az != p.home_az]
+    assert {p.home_az for p in cross} == {0}   # only AZ-0 partitions move
+
+
+# -- cache re-routing --------------------------------------------------------
+
+def test_cache_resize_reroutes_entries_without_flushing():
+    cache = DistributedCache(az=0, members=2, capacity_per_member=1 << 20,
+                             store=SimulatedS3(seed=0))
+    blobs = {f"blob-{i}": bytes([i]) * 64 for i in range(40)}
+    for k, v in blobs.items():
+        cache.fill(k, v)
+    moved_up = cache.resize(4)
+    assert moved_up > 0                          # some keys re-routed...
+    assert moved_up < 40                         # ...but not a flush
+    for k, v in blobs.items():                   # nothing was lost
+        assert cache.probe(k) == v
+    hits = cache.stats.hits
+    moved_down = cache.resize(1)
+    assert cache.stats.reroutes == moved_up + moved_down
+    for k, v in blobs.items():
+        assert cache.probe(k) == v
+    assert cache.stats.hits == hits + 40
+
+
+# -- rebalance + exactly-once handoff ---------------------------------------
+
+def run_scenario(mode, join_t=0.4, crash_t=0.9, n=3000, **kw):
+    eng = make_engine()
+    cluster = ElasticCluster(eng, mode=mode, heartbeat_timeout_s=0.15,
+                             **kw)
+    eng.loop.at(join_t, cluster.add_worker)
+    cluster.crash_worker_at(crash_t, "w1")
+    submit_all(eng, make_records(n))
+    metrics = eng.run()
+    return eng, cluster, metrics
+
+
+def test_cooperative_join_crash_is_exactly_once_bit_identical():
+    """The acceptance scenario: a worker joins mid-stream (cooperative
+    rebalance), then an original worker crashes (reassignment). Delivery
+    must be record-by-record bit-identical to a static-cluster run."""
+    static = make_engine()
+    submit_all(static, make_records(3000))
+    ms = static.run()
+    eng, cluster, me = run_scenario("cooperative")
+    assert out_multiset(eng) == out_multiset(static)
+    assert me.records_delivered == ms.records_delivered == 3000
+    assert me.duplicates_delivered == 0
+    assert me.records_replayed > 0          # the crash really lost work
+    events = [e for e in cluster.rebalancer.events if not e.superseded]
+    assert [e.reason for e in events] == ["join", "crash"]
+    join_ev = events[0]
+    # sticky: the join moves at most the new worker's fair share
+    assert 0 < len(join_ev.moved) <= -(-CFG.num_partitions // 5)
+    assert cluster.total_lag() == 0
+
+
+def run_join_only(mode, **kw):
+    eng = make_engine()
+    cluster = ElasticCluster(eng, mode=mode, heartbeat_timeout_s=0.15,
+                             **kw)
+    eng.loop.at(0.4, cluster.add_worker)
+    submit_all(eng, make_records(3000))
+    return eng, cluster, eng.run()
+
+
+def test_eager_rebalance_pauses_the_world_cooperative_does_not():
+    _, coop, mc = run_join_only("cooperative")
+    _, eager, me = run_join_only("eager", sync_barrier_s=0.5)
+    # both modes stay exactly-once
+    assert me.duplicates_delivered == mc.duplicates_delivered == 0
+    assert me.records_delivered == mc.records_delivered == 3000
+    # during the eager barrier EVERY partition is revoked, so commits
+    # publishing into the log find no owner and entries wait for the
+    # resume; a cooperative join never pauses unmoved partitions
+    assert eager.stats.undeliverable > 0
+    assert coop.stats.undeliverable == 0
+    assert eager.stats.replayed_entries >= coop.stats.replayed_entries
+
+
+def test_cooperative_migration_waves_are_incremental():
+    eng, cluster, _ = run_scenario("cooperative", migration_batch=1,
+                                   migration_interval_s=0.02)
+    ev = [e for e in cluster.rebalancer.events if not e.superseded][0]
+    # one partition per wave: the join migration is spread over time
+    assert ev.ended_at - ev.started_at >= 0.02 * (len(ev.moved) - 1) - 1e-9
+
+
+def test_handoff_replays_from_committed_offset_and_dedups():
+    """Offsets gate the handoff: the new owner replays everything after
+    the committed offset; anything the old owner already delivered is
+    dropped by the delivery-time dedup."""
+    eng = make_engine(n_instances=2)
+    cluster = ElasticCluster(eng, heartbeat_timeout_s=0.15)
+    p = 0
+    owner = cluster.parts[p].owner
+    other = next(w.worker_id for w in cluster.membership.alive()
+                 if w.worker_id != owner)
+    notes = [note(p, f"blob-{i}") for i in range(5)]
+    offs = [cluster.publish(n) for n in notes]
+    assert offs == [0, 1, 2, 3, 4]
+    # old owner delivers 0-2; only 0-1 get committed
+    assert all(cluster.on_delivery(notes[i], i, owner) for i in range(2))
+    cluster.commit_offsets(eng.loop.now)
+    assert cluster.offsets.committed(cluster.GROUP, p) == 2
+    assert cluster.on_delivery(notes[2], 2, owner)   # delivered, uncommitted
+    # handoff: commits the frontier (now 3) and replays 3..5 to `other`
+    replayed = cluster.assign_partition(p, other)
+    assert cluster.offsets.committed(cluster.GROUP, p) == 3
+    assert replayed == 2
+    assert cluster.stats.replayed_entries == 2
+    # a duplicate of the already-delivered entry 2 is dropped
+    assert not cluster.on_delivery(notes[2], 2, other)
+    assert cluster.stats.handoff_duplicates_dropped == 1
+    # the replayed tail delivers exactly once
+    assert cluster.on_delivery(notes[3], 3, other)
+    assert not cluster.on_delivery(notes[3], 3, other)
+
+
+def test_az_outage_falls_back_to_cross_az_consumption():
+    eng = make_engine(n_instances=6)
+    cluster = ElasticCluster(eng, heartbeat_timeout_s=0.15)
+    cluster.az_outage_at(0.5, 0)
+    submit_all(eng, make_records(2400))
+    m = eng.run()
+    flat = sorted(r.timestamp_us for rs in eng.out.values() for r in rs)
+    assert flat == list(range(2400))        # no loss, no duplicates
+    assert m.duplicates_delivered == 0
+    alive_azs = {w.az for w in cluster.membership.alive()}
+    assert 0 not in alive_azs
+    # AZ-0 partitions are consumed by out-of-AZ owners now
+    for st in cluster.parts.values():
+        if st.home_az == 0:
+            w = cluster.membership.workers[st.owner]
+            assert w.az != 0
+    assert cluster.stats.cross_az_deliveries > 0
+
+
+# -- autoscaler --------------------------------------------------------------
+
+def elastic_cfg(**kw):
+    base = dict(n_nodes=2, inst_per_node=2, partitions_factor=3,
+                duration_s=3.0, max_interval_s=0.25,
+                commit_interval_s=0.25, seed=3)
+    base.update(kw)
+    return SimConfig(**base)
+
+
+def test_autoscaler_scales_out_on_spike_and_back_in():
+    eng, cluster, s = simulate_elastic(elastic_cfg(), scale=0.001,
+                                       spike_factor=3.0)
+    acts = [d.action for d in cluster.autoscaler.decisions]
+    assert "scale_out" in acts
+    assert s["lag_final"] == 0 and s["workers_final"] >= 2
+    assert eng.metrics.duplicates_delivered == 0
+    # the run pays for worker-time actually used, and reports it
+    assert s["infra_cost_usd"] > 0
+
+
+def test_autoscaler_respects_bounds_and_cooldown():
+    pol = AutoscalePolicy(min_workers=2, max_workers=5, cooldown_s=1.0)
+    _, cluster, _ = simulate_elastic(elastic_cfg(), scale=0.001,
+                                     spike_factor=4.0, policy=pol)
+    sizes = [d.workers_after for d in cluster.autoscaler.decisions]
+    assert all(2 <= n <= 5 for n in sizes)
+    times = [d.t for d in cluster.autoscaler.decisions]
+    assert all(b - a >= 1.0 - 1e-9 for a, b in zip(times, times[1:]))
+
+
+def test_simulate_elastic_crash_recovery_summary():
+    eng, cluster, s = simulate_elastic(elastic_cfg(), scale=0.001,
+                                       crash_at=2.0)
+    assert s["rebalances"] >= 1 and s["partitions_moved"] > 0
+    assert s["lag_final"] == 0
+    assert eng.metrics.duplicates_delivered == 0
+    crashed = [w for w in cluster.membership.workers.values()
+               if w.state == "crashed"]
+    assert [w.worker_id for w in crashed] == ["w1"]

@@ -6,7 +6,7 @@ import pytest
 
 from repro.core import (AsyncShuffleEngine, BlobShuffleConfig, EngineConfig,
                         EventLoop, Record, WorkloadConfig, drive, generate)
-from repro.core.store import LatencyModel
+from repro.core.stores import LatencyModel
 
 CFG = BlobShuffleConfig(batch_bytes=64 * 1024, max_interval_s=0.5,
                         num_partitions=9, num_az=3)

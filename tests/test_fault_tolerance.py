@@ -127,7 +127,7 @@ def test_hedged_fetch_improves_heavy_tail():
     """Hedging pays off under degraded-store incidents (heavy tail σ=0.8);
     under the calibrated steady-state σ=0.42 the gain at p99 is marginal —
     an honest modeling result recorded in EXPERIMENTS.md."""
-    from repro.core.store import LatencyModel
+    from repro.core.stores import LatencyModel
     h = HedgedFetcher(LatencyModel(sigma=0.8), hedge_quantile=0.95, seed=0)
     base, hedged = h.tail_improvement(16 * 1024 * 1024, n=30000, pct=99.9)
     assert hedged < base * 0.75                   # ≥25% p99.9 cut

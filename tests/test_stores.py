@@ -256,3 +256,13 @@ def test_pipeline_runs_on_alternate_backends():
         out = pipe.run(recs, commit_every=100)
         flat = [r.timestamp_us for rs in out.values() for r in rs]
         assert sorted(flat) == list(range(300))
+
+
+def test_legacy_store_shim_reexports_the_stores_package():
+    """``repro.core.store`` is a back-compat shim: every name it exports
+    must be the SAME object as in ``repro.core.stores``."""
+    import repro.core.store as shim
+    import repro.core.stores as stores
+    assert shim.__all__                      # shim keeps a public surface
+    for name in shim.__all__:
+        assert getattr(shim, name) is getattr(stores, name)
