@@ -11,7 +11,12 @@ Measures, in one run (so the comparison is apples-to-apples):
     (sort/rank + gather in one jitted pass, jnp path on CPU);
   * **debatch** — bytes/s extracting partitions from a blob payload,
     legacy ``extract`` (per-``Record``) vs columnar ``extract_batch``
-    (memoryview slice + vectorized arena gather).
+    (memoryview slice + vectorized arena gather);
+  * **format** — columnar-v2 encode/decode GB/s on the same Zipf blob,
+    the compressed ratio, and $/logical-GiB per storage tier with and
+    without compression (request charges fixed, byte charges scaled);
+  * **compress-pack** — blobs/s through the fused compress+pack op
+    (gather + int8 quantize in one pass) next to the uncompressed pack.
 
 Writes ``BENCH_micro.json`` so CI can track the perf trajectory, and
 returns ``(name, us_per_call, derived)`` rows for ``benchmarks.run``.
@@ -119,25 +124,43 @@ def bench_ingest() -> Tuple[List[Row], dict]:
 
 def bench_pack() -> Tuple[List[Row], dict]:
     import jax
+    from repro.kernels.blob_codec.ops import compress_pack_fused
     from repro.kernels.blob_pack.ops import blob_pack_fused
 
     T, d, bins, cap = 16384, 512, 64, 512
     x = jax.random.normal(jax.random.key(2), (T, d), jax.numpy.bfloat16)
     keys = jax.random.randint(jax.random.key(3), (T,), 0, bins)
-    f = jax.jit(lambda x, k: blob_pack_fused(
+
+    def timed(fn):
+        jax.block_until_ready(fn(x, keys))      # compile
+        iters = 5
+        t0 = time.perf_counter()
+        for _ in range(iters):
+            out = fn(x, keys)
+        jax.block_until_ready(out)
+        return (time.perf_counter() - t0) / iters
+
+    f_pack = jax.jit(lambda x, k: blob_pack_fused(
         x, k, num_bins=bins, capacity=cap, use_pallas=False)[0])
-    jax.block_until_ready(f(x, keys))       # compile
-    iters = 5
-    t0 = time.perf_counter()
-    for _ in range(iters):
-        out = f(x, keys)
-    jax.block_until_ready(out)
-    per_call = (time.perf_counter() - t0) / iters
+    f_codec = jax.jit(lambda x, k: compress_pack_fused(
+        x, k, num_bins=bins, capacity=cap, use_pallas=False)[0])
+    per_call = timed(f_pack)
+    per_call_v2 = timed(f_codec)
     blobs_s = bins / per_call
     gbps = T * d * 2 / per_call / 1e9
-    rows = [("micro.blob_pack_fused", per_call * 1e6,
-             f"{blobs_s:,.0f}blobs/s {gbps:.1f}GB/s (jnp path)")]
-    return rows, {"blobs_s_pack": blobs_s, "pack_gb_s": gbps}
+    gbps_v2 = T * d * 2 / per_call_v2 / 1e9
+    # int8 codes + f32 scale per row vs bf16 rows
+    out_ratio = (cap * d + cap * 4) / (cap * d * 2)
+    rows = [
+        ("micro.blob_pack_fused", per_call * 1e6,
+         f"{blobs_s:,.0f}blobs/s {gbps:.1f}GB/s (jnp path)"),
+        ("micro.compress_pack_fused", per_call_v2 * 1e6,
+         f"{bins / per_call_v2:,.0f}blobs/s {gbps_v2:.1f}GB/s "
+         f"out_bytes={out_ratio:.2f}x (jnp path)"),
+    ]
+    return rows, {"blobs_s_pack": blobs_s, "pack_gb_s": gbps,
+                  "pack_gb_s_v2": gbps_v2,
+                  "pack_v2_out_bytes_ratio": out_ratio}
 
 
 def bench_debatch() -> Tuple[List[Row], dict]:
@@ -180,10 +203,64 @@ def bench_debatch() -> Tuple[List[Row], dict]:
     return rows, data
 
 
+def bench_format() -> Tuple[List[Row], dict]:
+    """Columnar-v2 encode/decode throughput + $/logical-GiB with and
+    without compression, on the same Zipf-skewed blob the other
+    microbenchmarks use."""
+    from repro.core.costs import TIERS, shuffle_cost_per_logical_gib
+    from repro.core.formats import COLUMNAR_V2, detect_format
+
+    wl = WorkloadConfig(arrival_rate=N_RECORDS, duration_s=1.0,
+                        record_bytes=RECORD_BYTES, key_skew=0.5, seed=7)
+    _, batch = generate_batch(wl)
+    wire = bytes(batch.serialize_rows())
+
+    def run_encode() -> float:
+        t0 = time.perf_counter()
+        run_encode.out = COLUMNAR_V2.encode_block([wire])
+        return time.perf_counter() - t0
+
+    enc_s = _best_of(run_encode)
+    block = run_encode.out[0]
+    ratio = len(block) / len(wire)
+    assert detect_format(block) is COLUMNAR_V2
+
+    def run_decode() -> float:
+        t0 = time.perf_counter()
+        run_decode.out = COLUMNAR_V2.decode_block(block)
+        return time.perf_counter() - t0
+
+    dec_s = _best_of(run_decode)
+    assert run_decode.out == wire, "v2 round-trip diverged"
+
+    data = {
+        "v2_encode_gb_s": len(wire) / enc_s / 1e9,
+        "v2_decode_gb_s": len(wire) / dec_s / 1e9,
+        "v2_compressed_ratio": ratio,
+    }
+    for tier in ("standard", "express-one-zone"):
+        prices = TIERS[tier]
+        raw = shuffle_cost_per_logical_gib(prices)
+        v2 = shuffle_cost_per_logical_gib(prices, compressed_ratio=ratio)
+        data[f"cost_per_gib_raw_{tier}"] = raw
+        data[f"cost_per_gib_v2_{tier}"] = v2
+    rows = [
+        ("micro.format_v2_encode", enc_s * 1e6,
+         f"{data['v2_encode_gb_s']:.2f}GB/s ratio={ratio:.3f}"),
+        ("micro.format_v2_decode", dec_s * 1e6,
+         f"{data['v2_decode_gb_s']:.2f}GB/s"),
+        ("micro.format_v2_cost", 0.0,
+         " ".join(f"{t}=${data[f'cost_per_gib_v2_{t}']:.4f}"
+                  f"(raw ${data[f'cost_per_gib_raw_{t}']:.4f})/GiB"
+                  for t in ("standard", "express-one-zone"))),
+    ]
+    return rows, data
+
+
 def run(json_path: str = "BENCH_micro.json") -> List[Row]:
     rows: List[Row] = []
     data = {}
-    for bench in (bench_ingest, bench_pack, bench_debatch):
+    for bench in (bench_ingest, bench_pack, bench_debatch, bench_format):
         r, d = bench()
         rows.extend(r)
         data.update(d)

@@ -8,16 +8,23 @@ Zone buys latency with request/storage price, and a throttled Standard
 tier shows the engine's retry + backoff lanes delivering every record
 exactly-once under injected 503s, bit-reproducibly for a fixed seed.
 
+The **compression lane** reruns the standard tier with
+``wire_format="columnar-v2"``: same records delivered, shipped bytes cut
+by the compressed ratio, $/GiB reported against *logical* (pre-encode)
+bytes so the two lanes are directly comparable.
+
 Rows follow the harness CSV contract (name, us, derived).
 """
 
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Callable, List, Tuple
 
 from repro.core import (EngineConfig, ExpressOneZoneStore, FaultyStore,
                         SimConfig, SimulatedS3, simulate_async)
+from repro.core.costs import dollars_per_gib
 from repro.core.stores import BlobStore
 
 Row = Tuple[str, float, str]
@@ -50,9 +57,11 @@ TIERS: List[Tuple[str, Callable[[int], BlobStore]]] = [
 ]
 
 
-def _run_tier(make_store: Callable[[int], BlobStore]):
+def _run_tier(make_store: Callable[[int], BlobStore],
+              wire_format: str = "raw-v1"):
     eng, summary = simulate_async(
-        CFG, scale=SCALE, exactly_once=True,
+        dataclasses.replace(CFG, wire_format=wire_format), scale=SCALE,
+        exactly_once=True,
         engine_cfg=EngineConfig(commit_interval_s=CFG.commit_interval_s,
                                 retention_sweep_s=1.0),
         store=make_store(CFG.seed))
@@ -78,6 +87,36 @@ def tier_sweep() -> List[Row]:
     return rows
 
 
+def compression_lane() -> List[Row]:
+    """raw-v1 vs columnar-v2 on the standard tier: identical delivery,
+    shipped bytes cut by the compressed ratio, $/logical-GiB side by
+    side (request charges fixed, byte charges scaled)."""
+    rows: List[Row] = []
+    results = {}
+    for fmt in ("raw-v1", "columnar-v2"):
+        t0 = time.perf_counter()
+        eng, s = _run_tier(_standard, wire_format=fmt)
+        wall = (time.perf_counter() - t0) * 1e6
+        logical = sum(b.stats.bytes_in for b in eng.batchers)
+        shipped = eng.store.stats.put_bytes
+        results[fmt] = (eng.metrics, logical, shipped)
+        rows.append((
+            f"tiers.standard[{fmt}]", wall,
+            f"p95={s['p95_s']:.3f}s shipped={shipped / 1e6:.1f}MB "
+            f"logical={logical / 1e6:.1f}MB ratio={shipped / logical:.4f} "
+            f"cost=${dollars_per_gib(s['cost_usd'], logical):.4f}/logical-GiB "
+            f"(${s['cost_per_gib']:.4f}/shipped-GiB) "
+            f"delivered={results[fmt][0].records_delivered}"))
+    m_raw, m_v2 = results["raw-v1"][0], results["columnar-v2"][0]
+    identical = (m_raw.records_delivered == m_v2.records_delivered
+                 and m_raw.records_in == m_v2.records_in)
+    compressed = results["columnar-v2"][2] < results["raw-v1"][2]
+    rows.append(("tiers.compression_lane", 0.0,
+                 f"delivery_identical={identical} "
+                 f"shipped_reduced={compressed}"))
+    return rows
+
+
 def reproducibility_check() -> List[Row]:
     """The degraded-store run (retries, backoff, throttling and all) must
     be bit-identical for a fixed seed — the determinism acceptance gate."""
@@ -96,7 +135,7 @@ def reproducibility_check() -> List[Row]:
 
 
 def run() -> List[Row]:
-    return tier_sweep() + reproducibility_check()
+    return tier_sweep() + compression_lane() + reproducibility_check()
 
 
 if __name__ == "__main__":

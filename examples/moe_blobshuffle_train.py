@@ -21,10 +21,9 @@ import jax                      # noqa: E402
 
 from repro.configs import get_config                      # noqa: E402
 from repro.data import lm_batch_stream                    # noqa: E402
-from repro.launch.mesh import make_test_mesh              # noqa: E402
-from repro.models import lm                               # noqa: E402
-from repro.models.common import init_params               # noqa: E402
-from repro.shuffle.api import ShuffleConfig               # noqa: E402
+from repro.launch import make_test_mesh                   # noqa: E402
+from repro.models import init_params, lm                  # noqa: E402
+from repro.shuffle import ShuffleConfig                   # noqa: E402
 from repro.training import (OptConfig, TrainConfig, adamw_init,  # noqa: E402
                             make_train_step)
 

@@ -20,8 +20,7 @@ import jax
 from repro.checkpoint import FileStore
 from repro.configs import get_config
 from repro.data import lm_batch_stream
-from repro.models import lm
-from repro.models.common import init_params
+from repro.models import init_params, lm
 from repro.runtime import FaultTolerantTrainer
 from repro.training import OptConfig, TrainConfig, adamw_init, \
     make_train_step

@@ -14,8 +14,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.configs import get_config
-from repro.models import lm
-from repro.models.common import init_params
+from repro.models import init_params, lm
 from repro.serving import ServeConfig, make_decode_step
 
 

@@ -9,6 +9,11 @@ from repro.core.recordbatch import (RecordBatch, fnv1a_batch,
 from repro.core.blob import (Blob, BlobIndex, ByteRange, Notification,
                              build_blob, build_blob_from_buffers,
                              extract, extract_batch)
+from repro.core.formats import (WIRE_MAGIC, BlobFormat, BlobFormatError,
+                                ColumnarV2, CorruptBlobError, RawV1,
+                                UnknownFormatError, detect_format,
+                                get_format, register_format,
+                                registered_formats)
 from repro.core.stores import (BlobStore, SimulatedS3, LatencyModel,
                                StoreCosts, StoreStats, StoreError,
                                SlowDownError, TransientStoreError,
@@ -28,7 +33,8 @@ from repro.core.pipeline import BlobShufflePipeline
 from repro.core.analytical import ModelParams
 from repro.core.capacity import CapacityModel
 from repro.core.costs import (AwsPrices, TierPrices, TIERS,
-                              blobshuffle_cost_per_hour,
-                              kafka_shuffle_cost_per_hour)
+                              blobshuffle_cost_per_hour, dollars_per_gib,
+                              kafka_shuffle_cost_per_hour,
+                              shuffle_cost_per_logical_gib)
 from repro.core.simulator import (SimConfig, SimResult, simulate,
                                   simulate_async, simulate_elastic)

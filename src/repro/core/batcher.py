@@ -30,6 +30,7 @@ import numpy as np
 
 from repro.core.blob import Blob, Notification, build_blob_from_buffers
 from repro.core.cache import DistributedCache
+from repro.core.formats import get_format
 from repro.core.recordbatch import RecordBatch
 from repro.core.records import Record, serialize
 
@@ -45,6 +46,9 @@ class BlobShuffleConfig:
     local_cache_bytes: int = 0           # 0 = disabled (paper default)
     distributed_cache_bytes: int = 4 * 1024 ** 3
     retention_s: float = 3600.0
+    #: registered blob wire format used for finalized blocks ("raw-v1"
+    #: writes the legacy byte-identical layout; "columnar-v2" compresses)
+    wire_format: str = "raw-v1"
 
 
 @dataclasses.dataclass
@@ -94,6 +98,11 @@ class Batcher:
                  partitioner_batch: Optional[Callable[
                      [RecordBatch], np.ndarray]] = None):
         self.cfg = cfg
+        # Resolve the wire format once (raises UnknownFormatError on a
+        # typo'd name at construction, not at first finalize). Raw v1 is
+        # the identity encoding, so it skips the per-block hook entirely.
+        fmt = get_format(cfg.wire_format)
+        self.fmt = None if fmt.format_id == 1 else fmt
         self.partition_to_az = partition_to_az
         self.partitioner = partitioner
         # vectorized partitioner for RecordBatch ingest; when absent the
@@ -290,7 +299,7 @@ class Batcher:
             self._blob_seq += 1
         blob, notes = build_blob_from_buffers(
             {p: pb.chunks for p, pb in parts.items()}, target_az=az,
-            blob_id=bid)
+            blob_id=bid, fmt=self.fmt)
         if self.uploader is not None:
             counts = {p: pb.count for p, pb in parts.items()}
             self.uploader(blob, notes, counts, now)

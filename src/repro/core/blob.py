@@ -12,6 +12,7 @@ import dataclasses
 import uuid
 from typing import Dict, List, Optional, Sequence, Tuple
 
+from repro.core.formats import BlobFormat, detect_format
 from repro.core.recordbatch import RecordBatch
 from repro.core.records import Record, deserialize_all, serialize
 
@@ -66,23 +67,31 @@ def new_blob_id() -> str:
 
 def build_blob_from_buffers(per_partition: Dict[int, Sequence],
                             target_az: int,
-                            blob_id: Optional[str] = None
+                            blob_id: Optional[str] = None,
+                            fmt: Optional[BlobFormat] = None
                             ) -> Tuple[Blob, List[Notification]]:
     """Assemble a blob from per-partition lists of already-serialized
     chunks (any bytes-like: ``bytes``, ``bytearray``, ``memoryview``).
 
     This is the zero-copy batch path: chunks are joined exactly once into
     the payload — no per-partition intermediate join, no re-serialization.
+    ``fmt`` routes each partition's chunks through a wire format's
+    ``encode_block`` (``None`` keeps the raw v1 identity path); byte
+    ranges index the *encoded* blocks, so ranged GETs fetch exactly one
+    decodable block and mixed-format blobs stay well-formed.
     """
     bid = blob_id or new_blob_id()
     chunks: List = []
     ranges: Dict[int, ByteRange] = {}
     off = 0
     for part in sorted(per_partition):
-        ln = sum(len(c) for c in per_partition[part])
+        enc = per_partition[part]
+        if fmt is not None:
+            enc = fmt.encode_block(enc)
+        ln = sum(len(c) for c in enc)
         if ln == 0:
             continue
-        chunks.extend(per_partition[part])
+        chunks.extend(enc)
         ranges[part] = ByteRange(off, ln)
         off += ln
     blob = Blob(bid, b"".join(chunks), BlobIndex(ranges), target_az)
@@ -104,12 +113,20 @@ def build_blob(per_partition: Dict[int, List[Record]], target_az: int,
 
 def extract(payload, rng: ByteRange) -> List[Record]:
     """Debatch one partition's records from a blob payload (or sub-blob).
-    The byte range is sliced as a ``memoryview`` — no payload copy."""
-    return deserialize_all(memoryview(payload)[rng.offset:rng.end])
+    The byte range is sliced as a ``memoryview`` — no payload copy. The
+    block's format is sniffed per block, so blobs mixing raw and framed
+    partitions decode transparently."""
+    block = memoryview(payload)[rng.offset:rng.end]
+    fmt = detect_format(block)
+    if fmt.format_id == 1:
+        return deserialize_all(block)       # raw v1: decode in place
+    return fmt.decode_block_batch(block).to_records()
 
 
 def extract_batch(payload, rng: ByteRange) -> RecordBatch:
     """Columnar debatch: one partition's byte range -> ``RecordBatch``
     (memoryview slice in, vectorized arena gather out — the payload bytes
-    are never copied into intermediate per-record objects)."""
-    return RecordBatch.from_buffer(memoryview(payload)[rng.offset:rng.end])
+    are never copied into intermediate per-record objects). Framed blocks
+    are sniffed and decoded straight into the columnar form."""
+    block = memoryview(payload)[rng.offset:rng.end]
+    return detect_format(block).decode_block_batch(block)

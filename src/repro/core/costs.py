@@ -57,6 +57,36 @@ TIERS: Dict[str, TierPrices] = {t.name: t
                                           PREMIUM)}
 
 
+def dollars_per_gib(cost_usd: float, nbytes: int) -> float:
+    """Normalize a dollar figure by the bytes it moved (0 bytes -> 0)."""
+    return cost_usd / (nbytes / GiB) if nbytes else 0.0
+
+
+def shuffle_cost_per_logical_gib(prices: TierPrices, *,
+                                 compressed_ratio: float = 1.0,
+                                 batch_bytes: int = 16 * 1024 ** 2,
+                                 gets_per_blob: float = 9.0,
+                                 retention_s: float = 3600.0) -> float:
+    """Dollars to shuffle one *logical* (pre-compression) GiB.
+
+    The Batcher triggers on logical buffered bytes, so a wire format that
+    compresses blocks at finalize leaves the blob/notification *counts*
+    unchanged and shrinks only the shipped bytes: request charges are
+    fixed, while storage and cross-AZ routing scale with
+    ``compressed_ratio`` (shipped/logical). This is why compression is
+    ~free on S3 Standard but pays directly on the per-GB-billed premium
+    tiers — the same asymmetry the paper exploits in the other direction
+    by batching requests.
+    """
+    n_blobs = GiB / batch_bytes
+    shipped_gb = compressed_ratio * GiB / 1e9
+    months = retention_s / 3600.0 / prices.hours_per_month
+    return (n_blobs / 1000.0 * prices.put_per_1k
+            + n_blobs * gets_per_blob / 1000.0 * prices.get_per_1k
+            + shipped_gb * months * prices.storage_gb_month
+            + shipped_gb * prices.cross_az_per_gb)
+
+
 @dataclasses.dataclass(frozen=True)
 class AwsPrices:
     s3_put_per_1k: float = 5.0e-3

@@ -1,0 +1,97 @@
+"""Section codecs for framed blob formats.
+
+Two layers:
+
+  * **frame codecs** — every column section of a v2 block is framed as
+    ``u8 codec | u32 enc_len | u32 raw_len | payload`` and the encoder
+    negotiates per section: zlib when it wins, stored otherwise. The
+    framing is self-describing, so new codecs slot in behind a new id
+    without a version bump.
+  * **int8 value codec** — the numpy twin of the device-side quantizer
+    in ``repro.shuffle.compression`` (same symmetric per-row absmax/127
+    semantics), applied to a uniform-width float32 value arena. Lossy:
+    only the explicitly-selected ``columnar-v2-int8`` format uses it.
+"""
+
+from __future__ import annotations
+
+import struct
+import zlib
+from typing import Tuple
+
+import numpy as np
+
+from repro.core.formats.base import CorruptBlobError
+
+CODEC_STORED = 0
+CODEC_ZLIB = 1
+
+_SECTION_HDR = struct.Struct("<BII")      # codec, enc_len, raw_len
+
+#: zlib level for section compression. Level 1 runs at frame-codec speed
+#: (the arenas are the hot path) and captures nearly all of the win on
+#: the highly redundant shuffle payloads the codec exists for.
+ZLIB_LEVEL = 1
+
+
+def encode_section(raw: bytes, *, level: int = ZLIB_LEVEL,
+                   try_compress: bool = True) -> bytes:
+    """Frame one section, negotiating zlib vs stored by encoded size."""
+    if try_compress and len(raw) > _SECTION_HDR.size:
+        enc = zlib.compress(raw, level)
+        if len(enc) < len(raw):
+            return _SECTION_HDR.pack(CODEC_ZLIB, len(enc), len(raw)) + enc
+    return _SECTION_HDR.pack(CODEC_STORED, len(raw), len(raw)) + raw
+
+
+def decode_section(block: memoryview, offset: int) -> Tuple[bytes, int]:
+    """Decode one framed section at ``offset``; returns (raw bytes, next
+    offset). Raises ``CorruptBlobError`` on truncation, an unknown codec
+    id, or a decompressed-length mismatch."""
+    end = offset + _SECTION_HDR.size
+    if end > len(block):
+        raise CorruptBlobError("truncated section header")
+    codec, enc_len, raw_len = _SECTION_HDR.unpack_from(block, offset)
+    if end + enc_len > len(block):
+        raise CorruptBlobError(
+            f"truncated section payload ({end + enc_len} > {len(block)})")
+    payload = bytes(block[end:end + enc_len])
+    if codec == CODEC_STORED:
+        if enc_len != raw_len:
+            raise CorruptBlobError("stored section length mismatch")
+        raw = payload
+    elif codec == CODEC_ZLIB:
+        try:
+            raw = zlib.decompress(payload)
+        except zlib.error as e:
+            raise CorruptBlobError(f"zlib section failed: {e}") from None
+        if len(raw) != raw_len:
+            raise CorruptBlobError(
+                f"section inflated to {len(raw)} bytes, expected {raw_len}")
+    else:
+        raise CorruptBlobError(f"unknown section codec id {codec}")
+    return raw, end + enc_len
+
+
+# -- int8 value codec --------------------------------------------------------
+
+def quantize_value_arena(arena: np.ndarray, width: int
+                         ) -> Tuple[np.ndarray, np.ndarray]:
+    """Symmetric per-row int8 quantization of a packed float32 value
+    arena (rows of ``width`` bytes, width % 4 == 0). Returns
+    (q int8 (n, width/4), scales float32 (n,)) — bit-compatible with
+    ``repro.shuffle.compression.int8_quantize`` run per row."""
+    x = np.frombuffer(np.ascontiguousarray(arena), "<f4")
+    x = x.reshape(-1, width // 4)
+    absmax = np.max(np.abs(x), axis=-1)
+    scale = np.where(absmax > 0, absmax / 127.0, 1.0).astype(np.float32)
+    q = np.clip(np.rint(x / scale[:, None]), -127, 127).astype(np.int8)
+    return q, scale
+
+
+def dequantize_value_arena(q: np.ndarray, scales: np.ndarray,
+                           width: int) -> np.ndarray:
+    """Inverse of ``quantize_value_arena``: back to a packed uint8 arena
+    of float32 rows."""
+    x = (q.astype(np.float32) * scales[:, None]).astype("<f4")
+    return np.ascontiguousarray(x).reshape(-1).view(np.uint8)

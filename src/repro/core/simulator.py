@@ -49,6 +49,7 @@ class SimConfig:
     cache_on_write: bool = True
     seed: int = 0
     offered_gib_s: float = 3.16         # load generators (3.24M rec/s × 1KiB)
+    wire_format: str = "raw-v1"         # registered blob wire format
 
     @property
     def n_inst(self) -> int:
@@ -109,7 +110,7 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
         batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
         max_interval_s=cfg.max_interval_s,
         num_partitions=cfg.partitions, num_az=cfg.n_az,
-        cache_on_write=cfg.cache_on_write)
+        cache_on_write=cfg.cache_on_write, wire_format=cfg.wire_format)
     wl = WorkloadConfig(
         arrival_rate=cfg.offered_gib_s * GiB * scale / cfg.record_bytes,
         duration_s=min(cfg.duration_s, 10.0),
@@ -160,7 +161,7 @@ def simulate_elastic(cfg: SimConfig, *,
         batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
         max_interval_s=cfg.max_interval_s,
         num_partitions=cfg.partitions, num_az=cfg.n_az,
-        cache_on_write=cfg.cache_on_write)
+        cache_on_write=cfg.cache_on_write, wire_format=cfg.wire_format)
     base_rate = cfg.offered_gib_s * GiB * scale / cfg.record_bytes
     duration = min(cfg.duration_s, max_sim_s)
     if phases is None:

@@ -1,10 +1,13 @@
 """Back-compat shim: the storage layer now lives in ``repro.core.stores``.
 
 Kept so historical imports (``from repro.core.store import SimulatedS3``)
-keep working; new code should import from ``repro.core.stores``.
+keep working; new code should import from ``repro.core.stores``. Importing
+this module emits a ``DeprecationWarning`` (once, at first import).
 """
 
 from __future__ import annotations
+
+import warnings
 
 from repro.core.stores import (BlobStore, LatencyModel, SimulatedS3,
                                SlowDownError, StoreCosts, StoreError,
@@ -16,3 +19,7 @@ __all__ = [
     "StoreCosts", "StoreError", "StoreStats", "StoreTimeoutError",
     "TransientStoreError",
 ]
+
+warnings.warn(
+    "repro.core.store is deprecated; import from repro.core.stores instead",
+    DeprecationWarning, stacklevel=2)

@@ -1,0 +1,7 @@
+from repro.kernels.blob_codec.ops import (compress_pack,
+                                          compress_pack_fused,
+                                          unpack_decompress,
+                                          unpack_decompress_fused)
+
+__all__ = ["compress_pack", "compress_pack_fused", "unpack_decompress",
+           "unpack_decompress_fused"]

@@ -1,0 +1,125 @@
+"""Pallas TPU kernels for the fused blob compress+pack codec.
+
+``compress_pack_fused_pallas`` extends ``blob_pack_fused_pallas``'s tiled
+vector gather with an in-register quantize: each program instance gathers
+FUSED_ROW_TILE destination rows with one ``jnp.take``, masks them, then
+computes the per-row absmax scale and int8 codes before anything is
+stored — the uncompressed f32 blob layout never materializes in HBM. Two
+outputs per tile: the int8 codes block and the f32 scales block.
+
+``unpack_decompress_fused_pallas`` is the inverse on the Debatcher side:
+one gather pulls the tile's int8 rows *and* their scales, and the
+dequantized f32 rows are produced in the same pass.
+
+Both are bit-exact (in interpret mode) with the composed oracles in
+``ref.py``: the quantizer is the *same function* (``ref.quantize_rows``)
+applied to the gathered tile, so kernel and oracle cannot drift.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.blob_codec.ref import quantize_rows
+
+FUSED_ROW_TILE = 128
+
+
+def _make_compress_pack_kernel(capacity: int, row_tile: int):
+    def kernel(order_ref, starts_ref, counts_ref, x_ref, q_ref, scale_ref):
+        b = pl.program_id(0)
+        t = pl.program_id(1)
+        start = starts_ref[b]
+        count = jnp.minimum(counts_ref[b], capacity)
+        order = order_ref[...]
+        U = order.shape[0]
+        r = (t * row_tile + jax.lax.broadcasted_iota(
+            jnp.int32, (row_tile, 1), 0)[:, 0])
+        pos = jnp.clip(start + r, 0, U - 1)
+        toks = jnp.take(order, pos, axis=0)
+        rows = jnp.take(x_ref[...], toks, axis=0)   # tiled vector gather
+        keep = (r < count)[:, None]
+        rows = jnp.where(keep, rows, jnp.zeros_like(rows))
+        # in-register symmetric per-row int8 quantize; padding -> (0, 1.0)
+        q, scale = quantize_rows(rows)
+        q_ref[0, :, :] = q
+        scale_ref[0, :] = scale
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+def compress_pack_fused_pallas(x, order, starts, counts, *, capacity: int,
+                               interpret: bool = True):
+    """Single-pass gather+quantize pack (bit-exact with
+    ``compress_pack_ref``): (T, d) tokens -> (q int8 (bins, capacity, d),
+    scales f32 (bins, capacity))."""
+    bins = starts.shape[0]
+    d = x.shape[-1]
+    row_tile = min(FUSED_ROW_TILE, capacity)
+    grid = (bins, -(-capacity // row_tile))
+    return pl.pallas_call(
+        _make_compress_pack_kernel(capacity, row_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(order.shape, lambda b, t: (0,)),      # full order
+            pl.BlockSpec(starts.shape, lambda b, t: (0,)),
+            pl.BlockSpec(counts.shape, lambda b, t: (0,)),
+            pl.BlockSpec(x.shape, lambda b, t: (0, 0)),        # tokens
+        ],
+        out_specs=[
+            pl.BlockSpec((1, row_tile, d), lambda b, t: (b, t, 0)),
+            pl.BlockSpec((1, row_tile), lambda b, t: (b, t)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bins, capacity, d), jnp.int8),
+            jax.ShapeDtypeStruct((bins, capacity), jnp.float32),
+        ],
+        interpret=interpret,
+    )(order, starts, counts, x)
+
+
+def _make_unpack_decompress_kernel(U: int, row_tile: int):
+    def kernel(slot_ref, valid_ref, q_ref, scale_ref, out_ref):
+        t = pl.program_id(0)
+        flat_q = q_ref[...]
+        R = flat_q.shape[0]
+        u = (t * row_tile + jax.lax.broadcasted_iota(
+            jnp.int32, (row_tile, 1), 0)[:, 0])
+        uc = jnp.minimum(u, U - 1)
+        s = jnp.clip(jnp.take(slot_ref[...], uc, axis=0), 0, R - 1)
+        q = jnp.take(flat_q, s, axis=0)             # tiled vector gather
+        scale = jnp.take(scale_ref[...], s, axis=0)
+        rows = q.astype(jnp.float32) * scale[:, None]   # dequantize
+        keep = ((u < U) & jnp.take(valid_ref[...], uc, axis=0))[:, None]
+        out_ref[:, :] = jnp.where(keep, rows, jnp.zeros_like(rows))
+    return kernel
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def unpack_decompress_fused_pallas(q, scales, slot, valid, *,
+                                   interpret: bool = True):
+    """Single-pass gather+dequantize unpack (bit-exact with
+    ``unpack_decompress_ref``): compressed blob layout -> (U, d) f32."""
+    bins, cap, d = q.shape
+    U = slot.shape[0]
+    flat_q = q.reshape(bins * cap, d)
+    flat_s = scales.reshape(bins * cap)
+    row_tile = min(FUSED_ROW_TILE, U)
+    grid = (-(-U // row_tile),)
+    return pl.pallas_call(
+        _make_unpack_decompress_kernel(U, row_tile),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec(slot.shape, lambda t: (0,)),
+            pl.BlockSpec(valid.shape, lambda t: (0,)),
+            pl.BlockSpec(flat_q.shape, lambda t: (0, 0)),
+            pl.BlockSpec(flat_s.shape, lambda t: (0,)),
+        ],
+        out_specs=pl.BlockSpec((row_tile, d), lambda t: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((U, d), jnp.float32),
+        interpret=interpret,
+    )(slot, valid, flat_q, flat_s)

@@ -1,0 +1,74 @@
+"""Public ops: fused compress+pack / unpack+decompress blob codec.
+
+Mirrors ``blob_pack.blob_pack_fused`` / ``blob_unpack.unpack_from_keys``:
+the sort/rank front half (``repro.shuffle.binning``) and the fused Pallas
+codec kernel run in one jitted pass, Pallas on TPU and the composed jnp
+oracle elsewhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.blob_codec.kernel import (compress_pack_fused_pallas,
+                                             unpack_decompress_fused_pallas)
+from repro.kernels.blob_codec.ref import (compress_pack_ref,
+                                          unpack_decompress_ref)
+from repro.shuffle.binning import bin_pack, sorted_order
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("capacity", "use_pallas"))
+def compress_pack(x, order, starts, counts, *, capacity: int,
+                  use_pallas: bool = None):
+    """(T, d) tokens + sorted-order description -> compressed blob layout
+    (q int8 (bins, capacity, d), scales f32 (bins, capacity))."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return compress_pack_fused_pallas(x, order, starts, counts,
+                                          capacity=capacity,
+                                          interpret=not _on_tpu())
+    return compress_pack_ref(x, order, starts, counts, capacity=capacity)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "capacity",
+                                             "use_pallas"))
+def compress_pack_fused(x, keys, *, num_bins: int, capacity: int,
+                        use_pallas: bool = None):
+    """Fused Batcher path: sort/rank front half + gather+quantize kernel
+    in one jitted pass. (tokens, destination keys) -> ((q, scales),
+    sorted-order description). Bit-exact with ``compress_pack_ref`` over
+    ``sorted_order``."""
+    order, starts, counts = sorted_order(keys, num_bins)
+    out = compress_pack(x, order, starts, counts, capacity=capacity,
+                        use_pallas=use_pallas)
+    return out, (order, starts, counts)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas",))
+def unpack_decompress(q, scales, slot, valid, *, use_pallas: bool = None):
+    """Compressed blob layout + slot/valid -> (U, d) f32 unit rows."""
+    if use_pallas is None:
+        use_pallas = _on_tpu()
+    if use_pallas:
+        return unpack_decompress_fused_pallas(q, scales, slot, valid,
+                                              interpret=not _on_tpu())
+    return unpack_decompress_ref(q, scales, slot, valid)
+
+
+@functools.partial(jax.jit, static_argnames=("num_bins", "capacity",
+                                             "use_pallas"))
+def unpack_decompress_fused(q, scales, keys, *, num_bins: int,
+                            capacity: int, use_pallas: bool = None):
+    """Fused Debatcher path: derive slot/valid from destination keys
+    (``bin_pack``'s rank half) and gather+dequantize in the same jitted
+    pass — compressed (bins, capacity, d) + keys -> (U, d) f32."""
+    pack = bin_pack(keys, num_bins, capacity)
+    return unpack_decompress(q, scales, pack.slot, pack.valid,
+                             use_pallas=use_pallas)

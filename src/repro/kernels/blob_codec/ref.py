@@ -1,0 +1,61 @@
+"""Pure-jnp oracle for the fused blob compress+pack codec.
+
+The wire-format PR makes compression part of the blob hot path (columnar
+v2's int8 value codec); on TPU the analogue is fusing the quantizer into
+the pack/unpack gathers so the blob layout is produced already-compressed
+in one pass:
+
+  compress_pack_ref    = blob_pack_ref  ∘ int8_quantize   (per blob row)
+  unpack_decompress_ref = int8_dequantize ∘ blob_unpack_ref
+
+Quantization is the symmetric per-row absmax/127 scheme from
+``repro.shuffle.compression`` — the same semantics the host-side
+``formats.codecs.quantize_value_arena`` applies per record. The scale is
+written as ``absmax * (1/127)`` rather than ``absmax / 127``: XLA
+rewrites a divide-by-constant to a reciprocal multiply in some lowering
+contexts (observed inside interpret-mode Pallas bodies) but never the
+reverse, so spelling the multiply explicitly is what makes ref and
+kernel bit-exact. Padding rows are all-zero and quantize to
+(q=0, scale=1.0).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.blob_pack.ref import blob_pack_ref
+from repro.kernels.blob_unpack.ref import blob_unpack_ref
+from repro.shuffle.compression import int8_dequantize
+
+_INV_127 = 1.0 / 127.0
+
+
+def quantize_rows(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row int8 quantization over the last axis, shared by
+    the oracle and the fused kernel body (any leading shape)."""
+    x32 = x.astype(jnp.float32)
+    absmax = jnp.max(jnp.abs(x32), axis=-1)
+    scale = jnp.where(absmax > 0, absmax * jnp.float32(_INV_127), 1.0)
+    q = jnp.clip(jnp.round(x32 / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def compress_pack_ref(x: jax.Array, order: jax.Array, starts: jax.Array,
+                      counts: jax.Array, *, capacity: int
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """(T, d) tokens + sorted-order description -> compressed blob layout
+    (q int8 (bins, capacity, d), scales float32 (bins, capacity))."""
+    packed = blob_pack_ref(x, order, starts, counts, capacity=capacity)
+    return quantize_rows(packed)
+
+
+def unpack_decompress_ref(q: jax.Array, scales: jax.Array, slot: jax.Array,
+                          valid: jax.Array, dtype=jnp.float32) -> jax.Array:
+    """Compressed blob layout + slot/valid description -> (U, d) unit rows
+    in ``dtype`` (dequantized; capacity-dropped units are zero)."""
+    x = int8_dequantize(q, scales, dtype)
+    return blob_unpack_ref(x, slot, valid)

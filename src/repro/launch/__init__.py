@@ -1,0 +1,5 @@
+"""Launch-layer public surface: mesh builders for examples and tests."""
+
+from repro.launch.mesh import make_production_mesh, make_test_mesh
+
+__all__ = ["make_production_mesh", "make_test_mesh"]

@@ -20,6 +20,25 @@ from jax.sharding import PartitionSpec as P
 
 from repro.shuffle import dispatch as D
 
+# Public kernel surface, resolved lazily (PEP 562): the kernel packages
+# import repro.shuffle.* for their host-side front halves, so importing
+# them eagerly here would cycle when a kernel module is imported first.
+_KERNEL_EXPORTS = {
+    "compress_pack_fused": "repro.kernels.blob_codec.ops",
+    "unpack_decompress_fused": "repro.kernels.blob_codec.ops",
+    "blob_pack_fused": "repro.kernels.blob_pack.ops",
+    "unpack_from_keys": "repro.kernels.blob_unpack.ops",
+}
+
+
+def __getattr__(name):
+    mod = _KERNEL_EXPORTS.get(name)
+    if mod is None:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}")
+    import importlib
+    return getattr(importlib.import_module(mod), name)
+
 
 @dataclasses.dataclass(frozen=True)
 class ShuffleConfig:

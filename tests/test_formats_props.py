@@ -1,0 +1,129 @@
+"""Property tests for the blob wire formats (hypothesis).
+
+Bit-exact round-trip across the registered lossless formats for
+arbitrary record batches, and typed-error behavior under arbitrary
+truncation and single-byte mutation of framed v2 blocks. Skipped when
+hypothesis is not installed (it is a dev extra; CI installs it).
+"""
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.formats import (COLUMNAR_V2, COLUMNAR_V2_INT8, RAW_V1,
+                                WIRE_MAGIC, BlobFormatError,
+                                CorruptBlobError, detect_format)  # noqa: E402
+from repro.core.formats.codecs import (decode_section,  # noqa: E402
+                                       encode_section)
+from repro.core.records import Record, serialize  # noqa: E402
+
+LOSSLESS = [RAW_V1, COLUMNAR_V2]
+
+# timestamps cross 2**63 so both the delta and the raw-u64 encodings run
+records_st = st.lists(
+    st.builds(Record,
+              key=st.binary(max_size=24),
+              value=st.binary(max_size=96),
+              timestamp_us=st.integers(min_value=0,
+                                       max_value=2 ** 64 - 1)),
+    max_size=40)
+
+
+@st.composite
+def wire_st(draw):
+    return b"".join(serialize(r) for r in draw(records_st))
+
+
+@st.composite
+def framed_v2_block_st(draw):
+    """A v2 block that is guaranteed framed: hot keys + runs of one byte
+    compress well, so the encoder never takes the raw fallback."""
+    n = draw(st.integers(min_value=8, max_value=32))
+    keys = draw(st.lists(st.binary(min_size=8, max_size=8),
+                         min_size=1, max_size=4))
+    recs = [Record(key=keys[draw(st.integers(0, len(keys) - 1))],
+                   value=bytes([draw(st.integers(0, 255))]) *
+                   draw(st.integers(16, 64)),
+                   timestamp_us=draw(st.integers(0, 2 ** 40)))
+            for _ in range(n)]
+    out = COLUMNAR_V2.encode_block([b"".join(serialize(r) for r in recs)])
+    block = bytes(out[0])
+    assert block[:4] == WIRE_MAGIC, "fallback despite compressible input"
+    return block
+
+
+@settings(max_examples=60, deadline=None)
+@given(wire=wire_st(), fmt=st.sampled_from(LOSSLESS))
+def test_lossless_round_trip_bit_exact(wire, fmt):
+    out = fmt.encode_block([wire])
+    block = b"".join(bytes(c) for c in out)
+    sniffed = detect_format(block)
+    assert bytes(sniffed.decode_block(block)) == wire
+    batch = sniffed.decode_block_batch(block)
+    assert bytes(batch.serialize_rows()) == wire
+
+
+@settings(max_examples=40, deadline=None)
+@given(wire=wire_st())
+def test_int8_variant_keys_and_timestamps_survive(wire):
+    """The lossy variant quantizes only the value column — keys and
+    timestamps must round-trip exactly for any input (including the raw
+    fallback and the not-uniform-float32 value shapes)."""
+    block = b"".join(bytes(c)
+                     for c in COLUMNAR_V2_INT8.encode_block([wire]))
+    batch = detect_format(block).decode_block_batch(block)
+    ref = RAW_V1.decode_block_batch(wire)
+    assert len(batch) == len(ref)
+    assert bytes(batch.key_arena) == bytes(ref.key_arena)
+    assert batch.timestamps.tolist() == ref.timestamps.tolist()
+
+
+@settings(max_examples=60, deadline=None)
+@given(block=framed_v2_block_st(),
+       cut=st.integers(min_value=0, max_value=10 ** 6))
+def test_truncated_framed_block_raises_typed_error(block, cut):
+    cut = cut % len(block)
+    truncated = block[:cut]
+    if truncated[:5] == block[:5]:
+        # still sniffs as v2 -> decoding must fail with the typed error
+        assert detect_format(truncated) is COLUMNAR_V2
+        with pytest.raises(CorruptBlobError):
+            COLUMNAR_V2.decode_block_batch(truncated)
+    else:
+        # header gone -> sniffs as headerless raw v1
+        assert detect_format(truncated) is RAW_V1
+
+
+@settings(max_examples=60, deadline=None)
+@given(block=framed_v2_block_st(),
+       pos=st.integers(min_value=0, max_value=10 ** 6),
+       delta=st.integers(min_value=1, max_value=255))
+def test_mutated_framed_block_fails_typed_or_decodes(block, pos, delta):
+    """Change one byte anywhere in a framed block: the reader must either
+    reject it with a typed BlobFormatError (corruption, unknown version,
+    unknown flags) or decode *some* batch — never escape with an untyped
+    exception from deep inside the column decoders."""
+    pos = pos % len(block)
+    mutated = block[:pos] + bytes([(block[pos] + delta) % 256]) \
+        + block[pos + 1:]
+    try:
+        fmt = detect_format(mutated)
+        if fmt.format_id == 2:
+            fmt.decode_block_batch(mutated)
+    except BlobFormatError:
+        pass                        # typed rejection is the contract
+    except Exception as e:          # pragma: no cover — the property
+        pytest.fail(f"untyped decode failure: {type(e).__name__}: {e}")
+
+
+@settings(max_examples=60, deadline=None)
+@given(raw=st.binary(max_size=512),
+       level=st.integers(min_value=1, max_value=9))
+def test_section_codec_round_trip(raw, level):
+    framed = encode_section(raw, level=level)
+    got, off = decode_section(memoryview(framed), 0)
+    assert got == raw and off == len(framed)
+    with pytest.raises(CorruptBlobError):
+        decode_section(memoryview(framed[:len(framed) - 1]), 0)

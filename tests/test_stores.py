@@ -261,8 +261,34 @@ def test_pipeline_runs_on_alternate_backends():
 def test_legacy_store_shim_reexports_the_stores_package():
     """``repro.core.store`` is a back-compat shim: every name it exports
     must be the SAME object as in ``repro.core.stores``."""
-    import repro.core.store as shim
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        import repro.core.store as shim
     import repro.core.stores as stores
     assert shim.__all__                      # shim keeps a public surface
     for name in shim.__all__:
         assert getattr(shim, name) is getattr(stores, name)
+
+
+def test_legacy_store_shim_warns_once_on_import():
+    """Importing the shim emits exactly one ``DeprecationWarning`` (at
+    module execution); the cached re-import stays silent."""
+    import importlib
+    import sys
+    import warnings
+
+    sys.modules.pop("repro.core.store", None)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        import repro.core.store  # noqa: F401
+    dep = [w for w in caught if issubclass(w.category, DeprecationWarning)
+           and "repro.core.store is deprecated" in str(w.message)]
+    assert len(dep) == 1
+
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        importlib.import_module("repro.core.store")   # cached: no re-exec
+    assert not [w for w in caught
+                if issubclass(w.category, DeprecationWarning)]
