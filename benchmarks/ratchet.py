@@ -1,0 +1,102 @@
+"""Throughput ratchet: fail when BENCH_micro throughput regresses.
+
+The committed ``BENCH_micro.json`` is the baseline. CI copies it aside,
+reruns the micro suite, and compares the fresh numbers against the copy:
+
+    cp BENCH_micro.json /tmp/bench_baseline.json
+    python -m benchmarks.run --suite micro --quick
+    python -m benchmarks.ratchet BENCH_micro.json \
+        --baseline /tmp/bench_baseline.json
+
+Exit status 1 (and a per-key report) when any ratcheted key falls below
+``tolerance × baseline``. The tolerance band absorbs shared-runner
+timing noise and the quick-vs-full geometry difference; it is tight
+enough to catch the regression class the ratchet exists for (an
+accidental fallback to a scalar path is a multi-x cliff, not a few
+percent).
+
+``--update`` rewrites the baseline file with the fresh values when they
+improve (per key, monotonic — the ratchet only ever goes up). CI cannot
+commit, so the loop is: CI uploads the fresh json as an artifact; a
+developer reruns locally with ``--update`` and commits the raised
+baseline.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+#: keys the ratchet enforces — the two headline data-plane throughputs
+#: (see FIELD_DOCS in benchmarks/micro.py; both are GB/s over logical
+#: bytes, so baseline and fresh runs are directly comparable)
+RATCHET_KEYS = ("pack_gb_s", "v2_encode_gb_s")
+
+#: fresh value must be >= TOLERANCE * baseline to pass. The band absorbs
+#: both runner timing noise and the committed baseline having been
+#: produced on a different machine than CI; the regressions the ratchet
+#: exists to catch (falling back to a scalar path, losing arena reuse,
+#: re-introducing a tobytes copy chain) are multi-x cliffs.
+TOLERANCE = 0.6
+
+
+def compare(fresh: dict, baseline: dict, keys=RATCHET_KEYS,
+            tolerance: float = TOLERANCE):
+    """Returns (failures, improvements): lists of (key, baseline, fresh)."""
+    failures, improvements = [], []
+    for key in keys:
+        base = baseline.get(key)
+        val = fresh.get(key)
+        if base is None:
+            continue                    # new key: nothing to ratchet yet
+        if val is None:
+            failures.append((key, base, float("nan")))
+        elif val < tolerance * base:
+            failures.append((key, base, val))
+        elif val > base:
+            improvements.append((key, base, val))
+    return failures, improvements
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly-written BENCH_micro.json")
+    ap.add_argument("--baseline", default="BENCH_micro.json",
+                    help="committed baseline to ratchet against")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="fresh must reach this fraction of baseline "
+                         f"(default {TOLERANCE})")
+    ap.add_argument("--update", action="store_true",
+                    help="raise the baseline file to any improved values")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+
+    failures, improvements = compare(fresh, baseline,
+                                     tolerance=args.tolerance)
+    for key, base, val in improvements:
+        print(f"ratchet: {key} improved {base:.3f} -> {val:.3f}")
+    if improvements and args.update:
+        for key, _, val in improvements:
+            baseline[key] = val
+        with open(args.baseline, "w") as f:
+            json.dump(baseline, f, indent=2, sort_keys=True)
+            f.write("\n")
+        print(f"ratchet: baseline {args.baseline} raised")
+    for key, base, val in failures:
+        print(f"ratchet: REGRESSION {key}: {val:.3f} < "
+              f"{args.tolerance:.2f} x baseline {base:.3f}")
+    if not failures:
+        print("ratchet: ok "
+              + " ".join(f"{k}={fresh.get(k, float('nan')):.3f}"
+                         f"(>= {args.tolerance:.2f}x{baseline.get(k, 0):.3f})"
+                         for k in RATCHET_KEYS))
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -33,7 +33,10 @@ SUITES = {
     "paper": "paper figure/table reproductions (Figs. 5-9 + model)",
     "async": "async engine latency/cost sweeps",
     "tiers": "storage-tier sweep (S3 Standard / Express / faulty)",
-    "micro": "data-plane microbenchmarks (writes BENCH_micro.json)",
+    "micro": "data-plane microbenchmarks: ingest/pack/debatch/format "
+             "host lanes + a device-mode Pallas kernel lane (compiled, "
+             "block_until_ready; skipped off-accelerator). Writes "
+             "BENCH_micro.json, appends BENCH_trajectory.jsonl",
     "elastic": "elasticity: rebalance, exactly-once handoff, autoscale "
                "(writes BENCH_elastic.json)",
     "tpu": "TPU shuffle adaptation",
@@ -51,12 +54,16 @@ def main() -> None:
     ap.add_argument("--suite", default="all", choices=sorted(SUITES),
                     metavar="SUITE",
                     help="one of: " + ", ".join(SUITES) + " (default: all)")
+    ap.add_argument("--quick", action="store_true",
+                    help="micro suite only: shrunk record/iteration counts "
+                         "for a sub-2-minute CI smoke lane (GB/s figures "
+                         "stay within the ratchet tolerance band)")
     args = ap.parse_args()
 
     rows = []
     if args.suite in ("all", "micro"):
         from benchmarks import micro
-        rows += micro.run()    # also writes BENCH_micro.json
+        rows += micro.run(quick=args.quick)  # also writes BENCH_micro.json
     if args.suite in ("all", "async"):
         from benchmarks import async_engine
         rows += async_engine.run()

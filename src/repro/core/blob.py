@@ -39,7 +39,7 @@ class BlobIndex:
 @dataclasses.dataclass(frozen=True)
 class Blob:
     blob_id: str
-    payload: bytes
+    payload: bytes          # any bytes-like (the batch path passes bytearray)
     index: BlobIndex
     target_az: int
 
@@ -73,15 +73,17 @@ def build_blob_from_buffers(per_partition: Dict[int, Sequence],
     """Assemble a blob from per-partition lists of already-serialized
     chunks (any bytes-like: ``bytes``, ``bytearray``, ``memoryview``).
 
-    This is the zero-copy batch path: chunks are joined exactly once into
-    the payload — no per-partition intermediate join, no re-serialization.
-    ``fmt`` routes each partition's chunks through a wire format's
-    ``encode_block`` (``None`` keeps the raw v1 identity path); byte
-    ranges index the *encoded* blocks, so ranged GETs fetch exactly one
-    decodable block and mixed-format blobs stay well-formed.
+    This is the zero-copy batch path: the payload is one preallocated
+    buffer sized from the range math that is computed anyway, and every
+    chunk is written into its final position exactly once — no
+    intermediate chunk list, no join. ``fmt`` routes each partition's
+    chunks through a wire format's ``encode_block`` (``None`` keeps the
+    raw v1 identity path); byte ranges index the *encoded* blocks, so
+    ranged GETs fetch exactly one decodable block and mixed-format blobs
+    stay well-formed.
     """
     bid = blob_id or new_blob_id()
-    chunks: List = []
+    encoded: List[Sequence] = []
     ranges: Dict[int, ByteRange] = {}
     off = 0
     for part in sorted(per_partition):
@@ -91,10 +93,17 @@ def build_blob_from_buffers(per_partition: Dict[int, Sequence],
         ln = sum(len(c) for c in enc)
         if ln == 0:
             continue
-        chunks.extend(enc)
+        encoded.append(enc)
         ranges[part] = ByteRange(off, ln)
         off += ln
-    blob = Blob(bid, b"".join(chunks), BlobIndex(ranges), target_az)
+    payload = bytearray(off)
+    pos = 0
+    for enc in encoded:
+        for c in enc:
+            ln = len(c)
+            payload[pos:pos + ln] = c
+            pos += ln
+    blob = Blob(bid, payload, BlobIndex(ranges), target_az)
     notes = [Notification(bid, p, r, target_az)
              for p, r in sorted(ranges.items())]
     return blob, notes

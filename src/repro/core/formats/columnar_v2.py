@@ -107,27 +107,30 @@ class ColumnarV2:
         if dict_enc is not None:
             flags |= FLAG_KEYS_DICT
             codes, dict_lengths, dict_arena = dict_enc
-            sections.append(encode_section(codes.tobytes()))
-            sections.append(encode_section(dict_lengths.tobytes()))
-            sections.append(encode_section(dict_arena.tobytes()))
+            sections.append(encode_section(codes))
+            sections.append(encode_section(dict_lengths))
+            sections.append(encode_section(dict_arena))
         else:
             klen = np.diff(batch.key_offsets).astype("<u4")
-            sections.append(encode_section(klen.tobytes()))
+            sections.append(encode_section(klen))
             sections.append(encode_section(
-                np.ascontiguousarray(batch.key_arena).tobytes()))
-        # timestamps: delta from ts0 (falls back to raw near the u64 top)
+                np.ascontiguousarray(batch.key_arena)))
+        # timestamps: delta from ts0 (falls back to raw near the u64 top).
+        # ts0-then-diffs is built as one <i8 array — ts0 < 2^63, so its
+        # two's-complement bytes equal the <u8 image the format specifies.
         ts = batch.timestamps
         if n >= 1 and bool((ts < np.uint64(1 << 63)).all()):
             flags |= FLAG_TS_DELTA
             signed = ts.astype(np.int64)
-            raw = signed[:1].astype("<u8").tobytes() + \
-                np.diff(signed).astype("<i8").tobytes()
-            sections.append(encode_section(raw))
+            deltas = np.empty(n, "<i8")
+            deltas[0] = signed[0]
+            np.subtract(signed[1:], signed[:-1], out=deltas[1:])
+            sections.append(encode_section(deltas))
         else:
-            sections.append(encode_section(ts.astype("<u8").tobytes()))
+            sections.append(encode_section(ts.astype("<u8")))
         # value lengths + arena (optionally int8-quantized)
         vlen = np.diff(batch.value_offsets).astype("<u4")
-        sections.append(encode_section(vlen.tobytes()))
+        sections.append(encode_section(vlen))
         arena = np.ascontiguousarray(batch.value_arena)
         vw = _uniform_width(batch.value_offsets)
         vwidth = 0
@@ -136,10 +139,10 @@ class ColumnarV2:
             flags |= FLAG_VALUES_INT8
             vwidth = vw
             q, scales = quantize_value_arena(arena, vw)
-            sections.append(encode_section(q.tobytes()))
-            sections.append(encode_section(scales.astype("<f4").tobytes()))
+            sections.append(encode_section(q))
+            sections.append(encode_section(scales.astype("<f4", copy=False)))
         else:
-            sections.append(encode_section(arena.tobytes()))
+            sections.append(encode_section(arena))
         hdr = _BLOCK_HDR.pack(WIRE_MAGIC, self.format_id, flags, n, vwidth)
         return hdr + b"".join(sections)
 

@@ -19,6 +19,7 @@ applied to the gathered tile, so kernel and oracle cannot drift.
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -51,15 +52,18 @@ def _make_compress_pack_kernel(capacity: int, row_tile: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "interpret", "row_tile"))
 def compress_pack_fused_pallas(x, order, starts, counts, *, capacity: int,
-                               interpret: bool = True):
+                               interpret: bool = True,
+                               row_tile: Optional[int] = None):
     """Single-pass gather+quantize pack (bit-exact with
     ``compress_pack_ref``): (T, d) tokens -> (q int8 (bins, capacity, d),
-    scales f32 (bins, capacity))."""
+    scales f32 (bins, capacity)). ``row_tile`` overrides the tile depth
+    (the device benchmark lane sweeps it)."""
     bins = starts.shape[0]
     d = x.shape[-1]
-    row_tile = min(FUSED_ROW_TILE, capacity)
+    row_tile = min(row_tile or FUSED_ROW_TILE, capacity)
     grid = (bins, -(-capacity // row_tile))
     return pl.pallas_call(
         _make_compress_pack_kernel(capacity, row_tile),
@@ -99,16 +103,17 @@ def _make_unpack_decompress_kernel(U: int, row_tile: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("interpret",))
+@functools.partial(jax.jit, static_argnames=("interpret", "row_tile"))
 def unpack_decompress_fused_pallas(q, scales, slot, valid, *,
-                                   interpret: bool = True):
+                                   interpret: bool = True,
+                                   row_tile: Optional[int] = None):
     """Single-pass gather+dequantize unpack (bit-exact with
     ``unpack_decompress_ref``): compressed blob layout -> (U, d) f32."""
     bins, cap, d = q.shape
     U = slot.shape[0]
     flat_q = q.reshape(bins * cap, d)
     flat_s = scales.reshape(bins * cap)
-    row_tile = min(FUSED_ROW_TILE, U)
+    row_tile = min(row_tile or FUSED_ROW_TILE, U)
     grid = (-(-U // row_tile),)
     return pl.pallas_call(
         _make_unpack_decompress_kernel(U, row_tile),

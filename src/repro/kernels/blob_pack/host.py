@@ -1,0 +1,87 @@
+"""Host (numpy) fast path for the fused blob pack.
+
+Off-accelerator, the jitted jnp oracle bottoms out in XLA:CPU's gather,
+which tops out well under the machine's copy bandwidth for this access
+pattern (many ~1 KiB row copies). The host path reaches the hardware
+limit with three moves numpy does at memcpy-class speed:
+
+  1. one stable argsort + bincount/cumsum (the ``sorted_order`` front
+     half, numpy twins of ``repro.shuffle.binning.sorted_order``);
+  2. one row gather ``x[order]`` into destination order, done on the
+     widest integer view of the row bytes;
+  3. per-bin **contiguous block copies** into the padded (bins,
+     capacity, d) layout — sequential memcpys, not per-row gathers.
+
+Outputs are bit-exact with ``blob_pack_ref`` (pure byte movement; the
+parity tests in ``tests/test_kernels.py`` assert it).
+
+Callers on a steady-state hot path should pass ``out=`` (and reuse the
+returned array): a fresh 10s-of-MiB allocation per call pays a page
+-fault storm that costs more than the copies themselves. With a reused
+arena the pack runs ~2x faster; padding rows are re-zeroed per call so
+reuse is semantically invisible.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+def sorted_order_np(keys, num_bins: int
+                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Numpy twin of ``repro.shuffle.binning.sorted_order`` — identical
+    (order, starts, counts) arrays (stable argsort ties resolve the same
+    way), so host- and device-packed blobs line up slot for slot."""
+    keys = np.asarray(keys)
+    order = np.argsort(keys, kind="stable").astype(np.int32)
+    counts = np.bincount(keys, minlength=num_bins).astype(np.int32)
+    starts = np.zeros(num_bins, np.int32)
+    np.cumsum(counts[:-1], out=starts[1:])
+    return order, starts, counts
+
+
+def _widest_view(a: np.ndarray) -> np.ndarray:
+    """View (n, d)-shaped row bytes as the widest integer dtype dividing
+    the row size — fancy indexing copies per *item*, so wider items move
+    the same bytes with fewer copies."""
+    row_bytes = a.shape[-1] * a.dtype.itemsize
+    for width, dt in ((8, np.uint64), (4, np.uint32), (2, np.uint16)):
+        if row_bytes % width == 0 and a.dtype.itemsize != width:
+            try:
+                return a.view(dt)
+            except ValueError:       # non-contiguous last axis
+                return a
+        if a.dtype.itemsize == width:
+            return a
+    return a
+
+
+def blob_pack_fused_host(x, keys, *, num_bins: int, capacity: int,
+                         out: Optional[np.ndarray] = None
+                         ) -> Tuple[np.ndarray, Tuple[np.ndarray,
+                                                      np.ndarray,
+                                                      np.ndarray]]:
+    """(T, d) host rows + destination keys -> ((bins, capacity, d),
+    sorted-order description), bit-exact with ``blob_pack_ref``.
+
+    ``out``: optional preallocated (bins, capacity, d) array of ``x``'s
+    dtype to write into (arena reuse; see module docstring)."""
+    x = np.asarray(x)
+    d = x.shape[-1]
+    order, starts, counts = sorted_order_np(keys, num_bins)
+    reuse = (out is not None and out.shape == (num_bins, capacity, d)
+             and out.dtype == x.dtype and out.flags.c_contiguous)
+    if not reuse:
+        out = np.zeros((num_bins, capacity, d), x.dtype)
+    xs = _widest_view(np.ascontiguousarray(x))[order]
+    ov = _widest_view(out)
+    take = np.minimum(counts, capacity)
+    for b in range(num_bins):
+        s = starts[b]
+        c = take[b]
+        ov[b, :c] = xs[s:s + c]
+        if reuse and c < capacity:
+            ov[b, c:] = 0
+    return out, (order, starts, counts)

@@ -1,18 +1,18 @@
 """Pallas TPU kernels for blob_pack (Batcher gather into blob layout).
 
-Two generations:
+Both kernels now share one whole-tile body: each program instance
+computes the tile's destination rows at once (iota → clip → order
+lookup) and gathers all ``row_tile`` rows with a single vectorized
+``jnp.take`` — the original per-row ``fori_loop`` body (which serialized
+one gather per destination row) is gone.
 
-* ``blob_pack_pallas`` — the original reference kernel. Grid:
-  (bins, ceil(capacity / ROW_TILE)); each program instance materializes
-  ROW_TILE destination rows with a ``fori_loop`` that gathers **one row
-  per iteration** (serialized row-at-a-time body).
-* ``blob_pack_fused_pallas`` — the fused single-pass kernel. Same grid,
-  but the body is one **tiled vector gather**: the whole tile's token
-  indices are computed at once (iota → clip → order lookup) and all
-  FUSED_ROW_TILE rows are gathered in a single vectorized ``jnp.take``,
-  masked, and stored — no per-row loop. Combined with the jit-fused
-  sort/rank front half in ``ops.blob_pack_fused`` this replaces the old
-  two-pass (bin_pack rank/scatter, then gather) structure.
+Tile geometry is retuned for the VPU: ``ROW_TILE`` was 8 — far below
+the (sublane × lane) shapes the vector unit wants — and is now 128, so
+a tile is a (128, d) block: lane-aligned along the whole feature dim and
+deep enough in the sublane dim to amortize the gather's index math. Both
+wrappers take a ``row_tile`` override so the device-mode benchmark lane
+(``benchmarks/micro.py``) can sweep row-tile configurations the way
+MaxText tunes its combine thresholds, without editing kernel source.
 
 The feature dim is kept whole per row (d ≤ a few K → tile × d blocks sit
 comfortably in VMEM and are lane-aligned for the VPU).
@@ -21,59 +21,24 @@ comfortably in VMEM and are lane-aligned for the VPU).
 from __future__ import annotations
 
 import functools
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-ROW_TILE = 8
+ROW_TILE = 128
 FUSED_ROW_TILE = 128
 
-
-def _make_kernel(capacity: int, row_tile: int):
-    def kernel(order_ref, starts_ref, counts_ref, x_ref, out_ref):
-        b = pl.program_id(0)
-        t = pl.program_id(1)
-        start = starts_ref[b]
-        count = jnp.minimum(counts_ref[b], capacity)
-        U = order_ref.shape[0]
-
-        def body(i, _):
-            r = t * row_tile + i                    # row within the bin
-            pos = jnp.clip(start + r, 0, U - 1)
-            tok = order_ref[pos]
-            row = x_ref[tok, :]
-            row = jnp.where(r < count, row, jnp.zeros_like(row))
-            out_ref[0, i, :] = row
-            return 0
-
-        jax.lax.fori_loop(0, row_tile, body, 0)
-    return kernel
+#: row-tile candidates the device benchmark lane sweeps (clamped to
+#: capacity at call time); 8 is kept as the degenerate legacy point so
+#: the sweep shows what the retune bought
+SWEEP_ROW_TILES = (8, 32, 64, 128, 256)
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
-def blob_pack_pallas(x, order, starts, counts, *, capacity: int,
-                     interpret: bool = True):
-    bins = starts.shape[0]
-    d = x.shape[-1]
-    row_tile = min(ROW_TILE, capacity)
-    grid = (bins, -(-capacity // row_tile))
-    return pl.pallas_call(
-        _make_kernel(capacity, row_tile),
-        grid=grid,
-        in_specs=[
-            pl.BlockSpec(order.shape, lambda b, t: (0,)),      # full order
-            pl.BlockSpec(starts.shape, lambda b, t: (0,)),
-            pl.BlockSpec(counts.shape, lambda b, t: (0,)),
-            pl.BlockSpec(x.shape, lambda b, t: (0, 0)),        # tokens
-        ],
-        out_specs=pl.BlockSpec((1, row_tile, d), lambda b, t: (b, t, 0)),
-        out_shape=jax.ShapeDtypeStruct((bins, capacity, d), x.dtype),
-        interpret=interpret,
-    )(order, starts, counts, x)
-
-
-def _make_fused_kernel(capacity: int, row_tile: int):
+def _make_tile_kernel(capacity: int, row_tile: int):
+    """Whole-tile gather body shared by the plain and fused pack kernels:
+    one vectorized ``jnp.take`` per (bin, tile) program instance."""
     def kernel(order_ref, starts_ref, counts_ref, x_ref, out_ref):
         b = pl.program_id(0)
         t = pl.program_id(1)
@@ -92,17 +57,14 @@ def _make_fused_kernel(capacity: int, row_tile: int):
     return kernel
 
 
-@functools.partial(jax.jit, static_argnames=("capacity", "interpret"))
-def blob_pack_fused_pallas(x, order, starts, counts, *, capacity: int,
-                           interpret: bool = True):
-    """Single-pass tiled-vector-gather pack (same contract and bit-exact
-    output as ``blob_pack_pallas`` / ``blob_pack_ref``)."""
+def _pack_call(x, order, starts, counts, *, capacity: int, row_tile: int,
+               interpret: bool):
     bins = starts.shape[0]
     d = x.shape[-1]
-    row_tile = min(FUSED_ROW_TILE, capacity)
+    row_tile = min(row_tile, capacity)
     grid = (bins, -(-capacity // row_tile))
     return pl.pallas_call(
-        _make_fused_kernel(capacity, row_tile),
+        _make_tile_kernel(capacity, row_tile),
         grid=grid,
         in_specs=[
             pl.BlockSpec(order.shape, lambda b, t: (0,)),      # full order
@@ -114,3 +76,27 @@ def blob_pack_fused_pallas(x, order, starts, counts, *, capacity: int,
         out_shape=jax.ShapeDtypeStruct((bins, capacity, d), x.dtype),
         interpret=interpret,
     )(order, starts, counts, x)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "interpret", "row_tile"))
+def blob_pack_pallas(x, order, starts, counts, *, capacity: int,
+                     interpret: bool = True,
+                     row_tile: Optional[int] = None):
+    """Two-pass-compatible pack kernel (same contract as ``blob_pack_ref``),
+    now running the whole-tile gather body — the ``fori_loop`` generation
+    is retired."""
+    return _pack_call(x, order, starts, counts, capacity=capacity,
+                      row_tile=row_tile or ROW_TILE, interpret=interpret)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("capacity", "interpret", "row_tile"))
+def blob_pack_fused_pallas(x, order, starts, counts, *, capacity: int,
+                           interpret: bool = True,
+                           row_tile: Optional[int] = None):
+    """Single-pass tiled-vector-gather pack (same contract and bit-exact
+    output as ``blob_pack_pallas`` / ``blob_pack_ref``)."""
+    return _pack_call(x, order, starts, counts, capacity=capacity,
+                      row_tile=row_tile or FUSED_ROW_TILE,
+                      interpret=interpret)

@@ -13,10 +13,15 @@ import functools
 
 import jax
 
+from repro.kernels.blob_pack.host import (blob_pack_fused_host,
+                                          sorted_order_np)
 from repro.kernels.blob_pack.kernel import (blob_pack_fused_pallas,
                                             blob_pack_pallas)
 from repro.kernels.blob_pack.ref import blob_pack_ref
 from repro.shuffle.binning import sorted_order
+
+__all__ = ["blob_pack", "pack_from_keys", "blob_pack_fused",
+           "blob_pack_fused_host", "sorted_order_np"]
 
 
 def _on_tpu() -> bool:

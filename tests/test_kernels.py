@@ -11,7 +11,11 @@ from repro.kernels.blob_codec.ops import (compress_pack_fused,
                                           unpack_decompress_fused)
 from repro.kernels.blob_codec.ref import (compress_pack_ref,
                                           unpack_decompress_ref)
-from repro.kernels.blob_pack.kernel import (blob_pack_fused_pallas,
+from repro.kernels.blob_codec.host import compress_pack_fused_host
+from repro.kernels.blob_pack.host import (blob_pack_fused_host,
+                                          sorted_order_np)
+from repro.kernels.blob_pack.kernel import (SWEEP_ROW_TILES,
+                                            blob_pack_fused_pallas,
                                             blob_pack_pallas)
 from repro.kernels.blob_pack.ops import blob_pack_fused, pack_from_keys
 from repro.kernels.blob_pack.ref import blob_pack_ref
@@ -207,6 +211,136 @@ def test_compress_pack_roundtrip_within_int8_error():
     step = np.abs(np.asarray(x)).max(axis=-1, keepdims=True) / 127.0
     np.testing.assert_allclose(np.asarray(back), np.asarray(x),
                                atol=float(step.max()) * 0.51 + 1e-7)
+
+
+# --- tile-geometry edge cases -----------------------------------------------
+
+#: geometries that stress the grid/tile math: capacity below the tile,
+#: capacity not a multiple of the tile, single-lane features (d == 1),
+#: and bins the keys never hit (empty bins must stay zero / padding)
+EDGE_GEOMS = [
+    pytest.param(64, 16, 4, 3, 128, id="capacity-lt-row-tile"),
+    pytest.param(64, 16, 4, 37, 8, id="capacity-not-tile-multiple"),
+    pytest.param(100, 1, 8, 32, 16, id="d-eq-1"),
+    pytest.param(50, 8, 16, 8, 8, id="empty-bins"),
+    pytest.param(3, 1, 5, 7, 256, id="tiny-everything"),
+]
+
+
+def _edge_inputs(T, bins, seed=21):
+    # draw keys from the lower half of the bin range so the upper half
+    # is guaranteed empty (covers the empty-bins contract everywhere)
+    hi = max(1, bins // 2)
+    return jax.random.randint(jax.random.key(seed), (T,), 0, hi)
+
+
+@pytest.mark.parametrize("T,d,bins,cap,row_tile", EDGE_GEOMS)
+def test_pack_tile_geometry_edges(T, d, bins, cap, row_tile):
+    x = jax.random.normal(jax.random.key(20), (T, d))
+    keys = _edge_inputs(T, bins)
+    order, starts, counts = sorted_order(keys, bins)
+    ref = blob_pack_ref(x, order, starts, counts, capacity=cap)
+    for rt in (None, row_tile):
+        out = blob_pack_pallas(x, order, starts, counts, capacity=cap,
+                               interpret=True, row_tile=rt)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+        fused = blob_pack_fused_pallas(x, order, starts, counts,
+                                       capacity=cap, interpret=True,
+                                       row_tile=rt)
+        np.testing.assert_array_equal(np.asarray(fused), np.asarray(ref))
+    # bins beyond the key range really are empty
+    assert not np.asarray(ref)[bins // 2 + 1:].any()
+
+
+@pytest.mark.parametrize("T,d,bins,cap,row_tile", EDGE_GEOMS)
+def test_codec_tile_geometry_edges(T, d, bins, cap, row_tile):
+    x = jax.random.normal(jax.random.key(22), (T, d))
+    keys = _edge_inputs(T, bins)
+    order, starts, counts = sorted_order(keys, bins)
+    q_ref, s_ref = compress_pack_ref(x, order, starts, counts, capacity=cap)
+    for rt in (None, row_tile):
+        q, s = compress_pack_fused_pallas(x, order, starts, counts,
+                                          capacity=cap, interpret=True,
+                                          row_tile=rt)
+        np.testing.assert_array_equal(np.asarray(q), np.asarray(q_ref))
+        np.testing.assert_array_equal(np.asarray(s), np.asarray(s_ref))
+    # empty bins carry the quantizer's padding identity (q=0, scale=1)
+    assert not np.asarray(q_ref)[bins // 2 + 1:].any()
+    np.testing.assert_array_equal(np.asarray(s_ref)[bins // 2 + 1:], 1.0)
+
+
+def test_row_tile_sweep_parity():
+    """Every candidate in the device benchmark's row-tile sweep produces
+    bit-identical output — tile geometry is a pure perf knob."""
+    T, d, bins, cap = 200, 24, 8, 48
+    x = jax.random.normal(jax.random.key(23), (T, d))
+    keys = jax.random.randint(jax.random.key(24), (T,), 0, bins)
+    order, starts, counts = sorted_order(keys, bins)
+    ref = blob_pack_ref(x, order, starts, counts, capacity=cap)
+    for rt in SWEEP_ROW_TILES:
+        out = blob_pack_fused_pallas(x, order, starts, counts,
+                                     capacity=cap, interpret=True,
+                                     row_tile=rt)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))
+
+
+# --- host fast paths ---------------------------------------------------------
+
+@pytest.mark.parametrize("dtype", [np.float32, np.int32, "bfloat16"])
+def test_blob_pack_host_bit_parity(dtype):
+    """Host numpy pack is bit-exact with the oracle, both into a fresh
+    output and into a dirty reused arena (padding must be re-zeroed)."""
+    if dtype == "bfloat16":
+        dtype = np.asarray(jnp.zeros(0, jnp.bfloat16)).dtype
+    rng = np.random.default_rng(5)
+    T, d, bins, cap = 150, 12, 8, 24
+    x = rng.standard_normal((T, d)).astype(np.float32).astype(dtype)
+    keys = rng.integers(0, bins, T).astype(np.int32)
+    order, starts, counts = sorted_order(jnp.asarray(keys), bins)
+    ref = np.asarray(blob_pack_ref(jnp.asarray(x), order, starts, counts,
+                                   capacity=cap))
+    out, (o, s, c) = blob_pack_fused_host(x, keys, num_bins=bins,
+                                          capacity=cap)
+    np.testing.assert_array_equal(out.view(np.uint8), ref.view(np.uint8))
+    np.testing.assert_array_equal(o, np.asarray(order))
+    np.testing.assert_array_equal(s, np.asarray(starts))
+    np.testing.assert_array_equal(c, np.asarray(counts))
+    arena = np.ones((bins, cap, d), dtype)       # dirty arena
+    out2, _ = blob_pack_fused_host(x, keys, num_bins=bins, capacity=cap,
+                                   out=arena)
+    assert out2 is arena
+    np.testing.assert_array_equal(out2.view(np.uint8), ref.view(np.uint8))
+
+
+def test_compress_pack_host_bit_parity():
+    rng = np.random.default_rng(6)
+    T, d, bins, cap = 150, 12, 8, 24
+    x = rng.standard_normal((T, d)).astype(np.float32)
+    keys = rng.integers(0, bins, T).astype(np.int32)
+    order, starts, counts = sorted_order(jnp.asarray(keys), bins)
+    q_ref, s_ref = compress_pack_ref(jnp.asarray(x), order, starts, counts,
+                                     capacity=cap)
+    (q, s), _ = compress_pack_fused_host(x, keys, num_bins=bins,
+                                         capacity=cap)
+    np.testing.assert_array_equal(q, np.asarray(q_ref))
+    np.testing.assert_array_equal(s, np.asarray(s_ref))
+    arenas = (np.full((bins, cap, d), 3, np.int8),
+              np.full((bins, cap), 9.0, np.float32))
+    (q2, s2), _ = compress_pack_fused_host(x, keys, num_bins=bins,
+                                           capacity=cap, out=arenas)
+    assert q2 is arenas[0] and s2 is arenas[1]
+    np.testing.assert_array_equal(q2, np.asarray(q_ref))
+    np.testing.assert_array_equal(s2, np.asarray(s_ref))
+
+
+def test_sorted_order_np_matches_jnp():
+    rng = np.random.default_rng(7)
+    keys = rng.integers(0, 11, 500).astype(np.int32)
+    o, s, c = sorted_order_np(keys, 16)          # some bins empty
+    oj, sj, cj = sorted_order(jnp.asarray(keys), 16)
+    np.testing.assert_array_equal(o, np.asarray(oj))
+    np.testing.assert_array_equal(s, np.asarray(sj))
+    np.testing.assert_array_equal(c, np.asarray(cj))
 
 
 # --- flash attention ---------------------------------------------------------

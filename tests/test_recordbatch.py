@@ -167,6 +167,28 @@ def test_legacy_vs_columnar_blob_bit_identity(recs):
         assert lc == cc
 
 
+@pytest.mark.parametrize("recs", LISTS[1:], ids=IDS[1:])
+def test_partitions_unique_key_fallback_matches_rowwise(recs):
+    """Without a vectorized partitioner, ``compute_partitions`` applies
+    the scalar partitioner once per *unique* key — the result must be
+    bit-equal to applying it per row, on both the fixed-width (void-view
+    dedup) and ragged (dict-memo) key shapes."""
+    store = SimulatedS3(seed=0)
+    cache = DistributedCache(0, 1, 1 << 30, store)
+    P = 16
+    b = Batcher(BlobShuffleConfig(batch_bytes=1 << 62, num_partitions=P,
+                                  num_az=2),
+                lambda p: p % 2, lambda k: default_partitioner(k, P),
+                cache, name="u")          # no partitioner_batch: fallback
+    batch = RecordBatch.from_records(recs)
+    got = b.compute_partitions(batch)
+    rowwise = np.fromiter(
+        (default_partitioner(batch.key(i), P) for i in range(len(batch))),
+        np.int32, len(batch))
+    assert got.dtype == rowwise.dtype
+    np.testing.assert_array_equal(got, rowwise)
+
+
 def test_generate_batch_matches_generate():
     wl = WorkloadConfig(arrival_rate=2000, duration_s=0.5,
                         record_bytes=128, key_skew=0.7, seed=3)
