@@ -39,6 +39,10 @@ SUITES = {
              "BENCH_micro.json, appends BENCH_trajectory.jsonl",
     "elastic": "elasticity: rebalance, exactly-once handoff, autoscale "
                "(writes BENCH_elastic.json)",
+    "strategies": "shuffle-strategy head-to-head on one Zipf-skewed "
+                  "workload: default vs map-side combining vs push-based "
+                  "AZ-local vs two-round merge (writes "
+                  "BENCH_strategies.json)",
     "tpu": "TPU shuffle adaptation",
     "kernels": "Pallas kernel microbenchmarks",
     "dryrun": "roofline summary of results/dryrun",
@@ -55,9 +59,10 @@ def main() -> None:
                     metavar="SUITE",
                     help="one of: " + ", ".join(SUITES) + " (default: all)")
     ap.add_argument("--quick", action="store_true",
-                    help="micro suite only: shrunk record/iteration counts "
-                         "for a sub-2-minute CI smoke lane (GB/s figures "
-                         "stay within the ratchet tolerance band)")
+                    help="micro/strategies suites: shrunk record/iteration "
+                         "counts for a sub-2-minute CI smoke lane (micro "
+                         "GB/s figures stay within the ratchet tolerance "
+                         "band; strategy gates still hold)")
     args = ap.parse_args()
 
     rows = []
@@ -73,6 +78,9 @@ def main() -> None:
     if args.suite in ("all", "elastic"):
         from benchmarks import elastic
         rows += elastic.run()  # also writes BENCH_elastic.json
+    if args.suite in ("all", "strategies"):
+        from benchmarks import strategies
+        rows += strategies.run(quick=args.quick)  # BENCH_strategies.json
     if args.suite in ("all", "paper"):
         from benchmarks import paper_figs as F
         rows += F.fig5_latency_cdf()

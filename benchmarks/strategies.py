@@ -1,0 +1,203 @@
+"""Shuffle-strategy head-to-head on one Zipf-skewed open workload.
+
+Runs the identical skewed workload (same seed, same arrivals, same key
+stream) through the async engine once per registered strategy against a
+zonal ``ExpressOneZoneStore`` and compares what each policy actually
+moves through the object store:
+
+  * **default** — producer-AZ placement, one notification + ranged GET
+    per small blob. The baseline every ratio below is against.
+  * **combining** — map-side pre-aggregation (last-wins per key, the
+    KTable upsert combiner) inside each ingest micro-batch; under Zipf
+    skew the hot keys collapse and shipped logical bytes drop.
+  * **push** — destination-AZ-local placement: blobs are homed + cache
+    -filled where their consumer runs, so zonal reads replace every
+    cross-AZ GET; the producer's cross-AZ routing bytes are priced in.
+  * **merge** — two-round push-merge: a virtual-clock compactor
+    coalesces ``fan_in`` small per-batcher blobs into one merged
+    per-partition blob, dividing notification and GET request counts.
+
+Correctness is asserted inline, not sampled: push and merge must
+deliver record-for-record bit-identically to the default run; the
+combining run must deliver exactly the reference combine of the same
+input micro-batches (recomputed independently here); every run must be
+duplicate-free (exactly-once).
+
+Writes ``BENCH_strategies.json`` with per-strategy shipped bytes,
+request counts, cross-AZ GETs, $/logical-GiB, and p95 — plus the CI
+gate fields (combining shipped-bytes ratio, push cross-AZ GETs, merge
+GET ratio).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Dict, List, Tuple
+
+from repro.core import (ExpressOneZoneStore, SimConfig, WorkloadConfig,
+                        default_partitioner_batch, generate_batch,
+                        simulate_async)
+from repro.core.strategy import CombiningStrategy
+
+Row = Tuple[str, float, str]
+GiB = 1024 ** 3
+
+STRATEGY_NAMES = ("default", "combining", "push", "merge")
+
+#: one skewed open workload shared by every strategy run: 6 instances
+#: across 3 AZs, 18 partitions, Zipf(1.2) keys over 10k distinct —
+#: skewed enough that hot keys dominate (combining's target) while the
+#: tail keeps every partition busy (merge's small-blob fan-in target)
+CFG = SimConfig(n_nodes=3, inst_per_node=2, n_az=3, duration_s=3.0,
+                commit_interval_s=0.5, seed=13)
+KEY_SKEW = 1.2
+SCALE = 0.002
+BATCH_RECORDS = 256
+
+
+def _sim_args(quick: bool) -> Tuple[SimConfig, float]:
+    if quick:
+        return dataclasses.replace(CFG, duration_s=1.5), SCALE
+    return CFG, SCALE
+
+
+def _workload(cfg: SimConfig, scale: float) -> WorkloadConfig:
+    # must mirror simulate_async's WorkloadConfig construction exactly:
+    # the reference combine below replays the same byte stream
+    return WorkloadConfig(
+        arrival_rate=cfg.offered_gib_s * GiB * scale / cfg.record_bytes,
+        duration_s=min(cfg.duration_s, 10.0),
+        record_bytes=cfg.record_bytes, key_skew=KEY_SKEW, seed=cfg.seed)
+
+
+def _multiset(eng) -> Dict[int, list]:
+    return {p: sorted((bytes(r.key), bytes(r.value), r.timestamp_us)
+                      for r in rs)
+            for p, rs in eng.out.items() if rs}
+
+
+def _reference_combine(cfg: SimConfig, scale: float) -> Dict[int, list]:
+    """Independently recompute what a correct combining run must
+    deliver: the same micro-batch slices ``drive`` hands the engine,
+    combined per batch by the declared combiner, partitioned by the
+    vectorized default partitioner."""
+    combiner = CombiningStrategy().combiner
+    _, batch = generate_batch(_workload(cfg, scale))
+    out: Dict[int, list] = {}
+    for s in range(0, len(batch), BATCH_RECORDS):
+        part_batch = batch.slice_rows(s, min(s + BATCH_RECORDS, len(batch)))
+        combined, _ = combiner.combine(part_batch)
+        if combined is None:
+            combined = part_batch
+        parts = default_partitioner_batch(combined, cfg.partitions)
+        for i in range(len(combined)):
+            out.setdefault(int(parts[i]), []).append(
+                (combined.key(i), combined.value(i),
+                 int(combined.timestamps[i])))
+    return {p: sorted(v) for p, v in out.items()}
+
+
+def _run_strategy(name: str, cfg: SimConfig, scale: float):
+    store = ExpressOneZoneStore(seed=cfg.seed, num_az=cfg.n_az)
+    eng, summary = simulate_async(
+        cfg, scale=scale, exactly_once=True, key_skew=KEY_SKEW,
+        store=store, ingest_batch_records=BATCH_RECORDS, strategy=name)
+    return eng, store, summary
+
+
+def run(quick: bool = False) -> List[Row]:
+    cfg, scale = _sim_args(quick)
+    rows: List[Row] = []
+    results: Dict[str, dict] = {}
+    engines: Dict[str, object] = {}
+
+    for name in STRATEGY_NAMES:
+        eng, store, summary = _run_strategy(name, cfg, scale)
+        st, ss, m = store.stats, eng.strategy.stats, eng.metrics
+        # $: the store bill (requests + bytes + cross-AZ GET routing +
+        # retention storage) plus the push placement's cross-AZ PUT
+        # routing, which the zonal store cannot see (it only knows the
+        # placement AZ) — priced at the same cross-AZ $/GB
+        cost = (st.cost_usd(store.costs, store.retention_s)
+                + ss.push_cross_az_bytes / 1e9 * store.costs.cross_az_per_gb)
+        results[name] = {
+            "records_delivered": m.records_delivered,
+            "duplicates_delivered": m.duplicates_delivered,
+            "records_combined": ss.records_combined,
+            "shipped_bytes": st.put_bytes,
+            "puts": st.puts,
+            "gets": st.gets,
+            "cross_az_gets": st.cross_az_gets,
+            "push_cross_az_bytes": ss.push_cross_az_bytes,
+            "notifications": len(eng.published),
+            "merged_blobs": ss.merged_blobs,
+            "merged_inputs": ss.merged_inputs,
+            "merge_fallback_notes": ss.merge_fallback_notes,
+            "cost_usd": cost,
+            "p50_s": m.latency_p(50),
+            "p95_s": m.latency_p(95),
+            "makespan_s": m.makespan_s,
+        }
+        engines[name] = eng
+
+    base = results["default"]
+    logical_gib = base["shipped_bytes"] / GiB   # pre-policy byte volume
+    for name, r in results.items():
+        r["shipped_ratio_vs_default"] = (r["shipped_bytes"]
+                                         / base["shipped_bytes"])
+        r["get_ratio_vs_default"] = base["gets"] / max(r["gets"], 1)
+        r["cost_per_logical_gib"] = r["cost_usd"] / logical_gib
+        rows.append((f"strategies.{name}", r["p95_s"] * 1e6,
+                     f"shipped={r['shipped_bytes']} "
+                     f"ratio={r['shipped_ratio_vs_default']:.3f} "
+                     f"gets={r['gets']} xaz={r['cross_az_gets']} "
+                     f"$|GiB={r['cost_per_logical_gib']:.3f}"))
+
+    # -- correctness gates (asserted here, re-checked by CI) --------------
+    m_default = _multiset(engines["default"])
+    bit_identical = all(_multiset(engines[n]) == m_default
+                        for n in ("push", "merge"))
+    combine_ok = (_multiset(engines["combining"])
+                  == _reference_combine(cfg, scale))
+    exactly_once = all(r["duplicates_delivered"] == 0
+                       for r in results.values())
+    delivered_ok = (
+        base["records_delivered"] - results["combining"]["records_combined"]
+        == results["combining"]["records_delivered"])
+
+    out = {
+        "quick": quick,
+        "key_skew": KEY_SKEW,
+        "batch_records": BATCH_RECORDS,
+        "strategies": results,
+        "payload_bit_identical": bit_identical,
+        "combining_matches_reference": combine_ok,
+        "combining_delivery_count_ok": delivered_ok,
+        "exactly_once_ok": exactly_once,
+        # headline gates (see ISSUE 8 acceptance + CI)
+        "combining_shipped_ratio": results["combining"][
+            "shipped_ratio_vs_default"],
+        "push_cross_az_gets": results["push"]["cross_az_gets"],
+        "merge_get_ratio": results["merge"]["get_ratio_vs_default"],
+    }
+    with open("BENCH_strategies.json", "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    rows.append(("strategies.gates", 0.0,
+                 f"bit_identical={bit_identical} combine_ok={combine_ok} "
+                 f"exactly_once={exactly_once} "
+                 f"ship_ratio={out['combining_shipped_ratio']:.3f} "
+                 f"push_xaz_gets={out['push_cross_az_gets']} "
+                 f"merge_get_ratio={out['merge_get_ratio']:.1f}"))
+    return rows
+
+
+def main() -> None:
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

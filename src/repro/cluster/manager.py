@@ -107,6 +107,7 @@ class ElasticCluster:
             self.partition_meta(), self.membership.alive(), {})
         for p, w in initial.items():
             self.parts[p].owner = w
+        engine.on_assignment_changed()
         self._align_caches()
         self.autoscaler: Optional[Autoscaler] = None
         if autoscale is not None:
@@ -281,6 +282,10 @@ class ElasticCluster:
         return n
 
     def on_rebalance_complete(self, ev: RebalanceEvent) -> None:
+        # the assignment snapshot moved: strategies routing blob
+        # placement by owner AZ (push-based shuffle) re-snapshot, and
+        # the batchers drop their cached partition→AZ tables
+        self.engine.on_assignment_changed()
         self._align_caches()
 
     def _align_caches(self) -> None:

@@ -27,6 +27,11 @@ from repro.core.commit import CommitCoordinator
 from repro.core.events import EventLoop
 from repro.core.engine import (AsyncShuffleEngine, EngineConfig,
                                ShuffleMetrics)
+from repro.core.strategy import (COMBINERS, STRATEGIES, CombiningStrategy,
+                                 DefaultStrategy, LastWinsCombiner,
+                                 PushStrategy, ShuffleStrategy,
+                                 StrategyStats, SumU64Combiner,
+                                 TwoRoundMergeStrategy, make_strategy)
 from repro.core.workload import (WorkloadConfig, drive, generate,
                                  generate_batch)
 from repro.core.pipeline import BlobShufflePipeline

@@ -54,6 +54,7 @@ from repro.core.events import EventLoop
 from repro.core.recordbatch import RecordBatch, default_partitioner_batch
 from repro.core.records import Record, default_partitioner
 from repro.core.stores import BlobStore, SimulatedS3, SlowDownError, StoreError
+from repro.core.strategy import make_strategy
 
 GiB = 1024 ** 3
 
@@ -159,7 +160,8 @@ class AsyncShuffleEngine:
     def __init__(self, cfg: BlobShuffleConfig,
                  engine_cfg: Optional[EngineConfig] = None, *,
                  n_instances: int = 3, store: Optional[BlobStore] = None,
-                 seed: int = 0, exactly_once: bool = True):
+                 seed: int = 0, exactly_once: bool = True,
+                 strategy=None):
         self.cfg = cfg
         self.ecfg = engine_cfg or EngineConfig()
         self.n_instances = n_instances
@@ -183,6 +185,11 @@ class AsyncShuffleEngine:
         # notification fan-out routes through its durable log instead of
         # the fixed-delay direct delivery, and instances can join/leave
         self.cluster = None
+        # pluggable shuffle policy (None | registered name | instance);
+        # DefaultStrategy makes every hook the identity — bit-identical
+        # to the pre-seam engine
+        self.strategy = make_strategy(strategy)
+        self.strategy.bind(self)
         # per-instance state: the instance set is DYNAMIC — every list
         # below grows via add_instance() and entries deactivate (but are
         # never removed, so indices stay stable) via remove_instance/_fail
@@ -227,6 +234,21 @@ class AsyncShuffleEngine:
     def partition_to_az(self, partition: int) -> int:
         return partition % self.cfg.num_az
 
+    def _partition_target_az(self, partition: int) -> int:
+        """Destination AZ for buffering/blob placement — routed through
+        the strategy so policies like push-based shuffle can follow the
+        cluster assignor instead of the static layout."""
+        return self.strategy.partition_target_az(partition)
+
+    def on_assignment_changed(self) -> None:
+        """Cluster hook: the partition→worker assignment changed. The
+        batchers' cached partition→AZ tables may now be stale (a
+        strategy can route by owner AZ), so drop them for lazy
+        recompute; then let the strategy re-snapshot."""
+        for b in self.batchers:
+            b._az_table = None
+        self.strategy.on_assignment_changed()
+
     # -- elastic instance set ---------------------------------------------
     def add_instance(self, az: Optional[int] = None) -> int:
         """Provision one more batcher instance (elastic scale-out). The
@@ -238,7 +260,7 @@ class AsyncShuffleEngine:
             az = i % cfg.num_az
         self._inst_az.append(az)
         self.active.append(True)
-        b = Batcher(cfg, self.partition_to_az,
+        b = Batcher(cfg, self._partition_target_az,
                     lambda key: default_partitioner(
                         key, cfg.num_partitions),
                     self.caches[az], uploader=self._make_uploader(i),
@@ -306,7 +328,7 @@ class AsyncShuffleEngine:
         now = self.loop.now
         b = self.batchers[i]
         part = b.partitioner(rec.key)
-        az = self.partition_to_az(part)
+        az = self._partition_target_az(part)
         # arrival enters the FIFO before Batcher.process so a size-triggered
         # finalize inside process() already sees it
         self._arrivals[(i, part)].append(now)
@@ -332,10 +354,15 @@ class AsyncShuffleEngine:
                       times: Optional[np.ndarray]) -> None:
         i = self._next_inst() if inst is None else inst
         now = self.loop.now
-        n = len(batch)
-        if n == 0:
+        n0 = len(batch)
+        if n0 == 0:
             self._note_ingested(0)
             return
+        # strategy hook: map-side combining shrinks the batch (and its
+        # aligned arrival times) BEFORE partitioning and the arrival
+        # FIFOs, so latency bookkeeping tracks the surviving records
+        batch, times = self.strategy.prepare_batch(batch, times)
+        n = len(batch)
         b = self.batchers[i]
         parts = b.compute_partitions(batch)
         # arrivals enter the per-partition FIFOs (in row = arrival order)
@@ -355,7 +382,7 @@ class AsyncShuffleEngine:
         az_table = b._partition_az_table()
         for az in dict.fromkeys(int(a) for a in az_table[parts]):
             self._arm_flush_timer(i, az)
-        self._note_ingested(n)
+        self._note_ingested(n0)
 
     def _arm_flush_timer(self, i: int, az: int) -> None:
         if (self.batchers[i].buffer_bytes.get(az, 0) > 0
@@ -426,7 +453,9 @@ class AsyncShuffleEngine:
 
     def _start_put(self, i: int, blob: Blob, notes: List[Notification],
                    attempt: int) -> None:
-        az = self._inst_az[i]
+        # placement hook: push-based strategies PUT into the blob's
+        # destination AZ so zonal stores home it next to its consumer
+        az = self.strategy.put_az(blob, self._inst_az[i])
         try:
             lat = self.store.begin_put(blob.blob_id, blob.size,
                                        now=self.loop.now, az=az)
@@ -473,16 +502,25 @@ class AsyncShuffleEngine:
         if epoch != self._epoch[i]:
             return  # instance crashed mid-upload: connection died with it
         now = self.loop.now
-        self.store.finish_put(blob.blob_id, blob.payload, now,
-                              az=self._inst_az[i])
+        inst_az = self._inst_az[i]
+        put_az = self.strategy.put_az(blob, inst_az)
+        self.store.finish_put(blob.blob_id, blob.payload, now, az=put_az)
+        if put_az != inst_az:
+            # zonal stores only see the placement AZ; surface the bytes
+            # the producer routed cross-AZ so the cost model can price
+            # the push (once per durable blob, not per attempt)
+            self.strategy.stats.push_cross_az_bytes += blob.size
         self.metrics.put_latencies.append(lat)
         self._uploads_inflight[i] -= 1
         if self.cfg.cache_on_write:
             # write-through lands in the WRITER's AZ cluster (paper §3.3):
             # same-AZ consumers hit it; cross-AZ consumers still lead one
-            # store GET into their own cluster (model's 2/3 GET ratio)
+            # store GET into their own cluster (model's 2/3 GET ratio).
+            # Push-based strategies redirect the fill to the destination
+            # AZ's cluster instead, making consumer reads zonal.
             self.loop.after(self.ecfg.cache_fill_latency_s,
-                            self.caches[self._inst_az[i]].fill,
+                            self.caches[
+                                self.strategy.fill_az(blob, inst_az)].fill,
                             blob.blob_id, blob.payload)
         c = self.coordinators[i]
         c.note_upload_complete(blob.blob_id, notes,
@@ -493,6 +531,11 @@ class AsyncShuffleEngine:
 
     # -- notification fan-out + prefetching fetch lane --------------------
     def _publish(self, note: Notification, inst: Optional[int] = None) -> None:
+        if self.strategy.on_publish(note, inst):
+            # intercepted (e.g. parked for a two-round merge): the
+            # strategy now owns eventual delivery, and the note does not
+            # count as published downstream
+            return
         self.published.append(note)
         if self.cluster is not None:
             # elastic mode: the notification becomes a durable log entry
@@ -739,7 +782,8 @@ class AsyncShuffleEngine:
                 or any(self._upload_q)
                 or any(self._fetch_inflight)
                 or any(self._fetch_q)
-                or any(b.buffered_bytes() for b in self.batchers))
+                or any(b.buffered_bytes() for b in self.batchers)
+                or self.strategy.work_pending())
 
     def _retention_tick(self, interval: float) -> None:
         """Periodic expiry sweep (paper §3.2): deletes blobs past the

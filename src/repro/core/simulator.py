@@ -89,7 +89,8 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
                    key_skew: float = 0.5,
                    latency: Optional[LatencyModel] = None,
                    store: Optional[BlobStore] = None,
-                   ingest_batch_records: Optional[int] = None
+                   ingest_batch_records: Optional[int] = None,
+                   strategy=None
                    ) -> "tuple[AsyncShuffleEngine, dict]":
     """Measured (not modeled) run of a ``SimConfig`` workload through the
     event-driven engine, scaled down by ``scale`` in offered rate and
@@ -105,6 +106,11 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
     lane: records enter as ``RecordBatch`` micro-batches of that many
     consecutive arrivals (vectorized partition + binning in the Batcher)
     instead of one event per record.
+
+    ``strategy`` selects a shuffle policy (None | registered name |
+    ``ShuffleStrategy`` instance — see ``repro.core.strategy``):
+    "combining" pre-aggregates hot keys map-side, "push" places blobs
+    destination-AZ-local, "merge" runs the two-round compactor.
     """
     bcfg = BlobShuffleConfig(
         batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
@@ -122,7 +128,7 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
         bcfg, engine_cfg or EngineConfig(
             commit_interval_s=cfg.commit_interval_s),
         n_instances=cfg.n_inst, store=store, seed=cfg.seed,
-        exactly_once=exactly_once)
+        exactly_once=exactly_once, strategy=strategy)
     drive(eng, wl, batch_records=ingest_batch_records)
     metrics = eng.run()
     return eng, metrics.summary(store)
@@ -141,7 +147,8 @@ def simulate_elastic(cfg: SimConfig, *,
                      heartbeat_timeout_s: float = 0.25,
                      exactly_once: bool = True,
                      store: Optional[BlobStore] = None,
-                     max_sim_s: float = 10.0
+                     max_sim_s: float = 10.0,
+                     strategy=None
                      ) -> "tuple[AsyncShuffleEngine, object, dict]":
     """Elastic scenario through the cluster subsystem: phased offered
     load (default steady → ``spike_factor``× spike → steady, driving the
@@ -173,7 +180,7 @@ def simulate_elastic(cfg: SimConfig, *,
         bcfg, engine_cfg or EngineConfig(
             commit_interval_s=min(cfg.commit_interval_s, 1.0)),
         n_instances=cfg.n_inst, store=store, seed=cfg.seed,
-        exactly_once=exactly_once)
+        exactly_once=exactly_once, strategy=strategy)
     cluster = ElasticCluster(
         eng, mode=mode, heartbeat_timeout_s=heartbeat_timeout_s,
         autoscale=(policy or AutoscalePolicy()) if autoscale else None)

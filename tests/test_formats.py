@@ -286,3 +286,91 @@ def test_engine_v2_reduces_shipped_bytes_with_same_delivery():
     assert eng_v2.store.stats.put_bytes < logical // 2
     assert eng_raw.store.stats.put_bytes == \
         sum(b.stats.bytes_in for b in eng_raw.batchers)
+
+
+# -- CODEC_CONST edge cases (section codec negotiation boundaries) ---------
+
+from repro.core.formats.codecs import CODEC_CONST  # noqa: E402
+
+
+def _stored_reference(raw: bytes) -> bytes:
+    """Round-trip through the never-compress (stored) path — the byte
+    oracle every negotiated encoding must reproduce exactly."""
+    out, nxt = decode_section(
+        memoryview(encode_section(raw, try_compress=False)), 0)
+    assert out == raw
+    return out
+
+
+def _codec_of(enc: bytes) -> int:
+    return enc[0]
+
+
+def test_const_period_not_dividing_arena_length():
+    # 8-byte repeating pattern but a 20-byte arena: 20 % 8 != 0, and the
+    # truncated tail also breaks the shorter probed periods — the const
+    # codec must NOT fire, and the negotiated encoding (zlib or stored)
+    # must still round-trip byte-identically
+    pattern = bytes(range(1, 9))
+    raw = (pattern * 3)[:20]
+    enc = encode_section(raw)
+    assert _codec_of(enc) != CODEC_CONST
+    out, _ = decode_section(memoryview(enc), 0)
+    assert out == raw == _stored_reference(raw)
+
+
+def test_const_period_with_aligned_repeats_fires_and_round_trips():
+    # the same pattern tiled a whole number of times DOES fire, stores
+    # only one period, and inflates back bit-exactly
+    pattern = bytes(range(1, 9))
+    raw = pattern * 5
+    enc = encode_section(raw)
+    assert _codec_of(enc) == CODEC_CONST
+    assert len(enc) == 9 + 8            # header + one period
+    out, nxt = decode_section(memoryview(enc), 0)
+    assert out == raw == _stored_reference(raw)
+    assert nxt == len(enc)
+
+
+def test_const_period_longer_than_arena_falls_back():
+    # 10 distinct bytes: every probed period is either non-dividing or
+    # longer than half the arena (n < 2p) — no constant encoding exists
+    raw = bytes([7, 1, 250, 3, 99, 5, 180, 2, 41, 13])
+    enc = encode_section(raw)
+    assert _codec_of(enc) != CODEC_CONST
+    out, _ = decode_section(memoryview(enc), 0)
+    assert out == raw == _stored_reference(raw)
+
+
+def test_all_same_arena_encodes_const_at_longest_admissible_period():
+    # a 10-byte all-same arena: p=8 and p=4 don't divide 10, so the
+    # longest-first probe lands on p=2 — CONST fires with a 2-byte
+    # pattern (the probe order prefers longer periods, not shorter)
+    raw = b"\x55" * 10
+    enc = encode_section(raw)
+    assert _codec_of(enc) == CODEC_CONST
+    assert len(enc) == 9 + 2
+    out, _ = decode_section(memoryview(enc), 0)
+    assert out == raw == _stored_reference(raw)
+
+
+@pytest.mark.parametrize("raw", [b"", b"\x00", b"\xff", b"ab"])
+def test_tiny_arenas_store_verbatim(raw):
+    # at or below the 9-byte section header there is nothing to win:
+    # 1-byte (and empty) arenas must take the stored path and round-trip
+    enc = encode_section(raw)
+    assert _codec_of(enc) == CODEC_STORED
+    out, nxt = decode_section(memoryview(enc), 0)
+    assert out == raw == _stored_reference(raw)
+    assert nxt == len(enc) == 9 + len(raw)
+
+
+def test_const_vs_zlib_vs_stored_all_byte_identical_on_boundary_sizes():
+    # sweep the negotiation boundary: for every size around the header
+    # floor and the 2p admission threshold, whatever codec wins must
+    # reproduce the stored oracle bit for bit
+    for n in (1, 8, 9, 10, 15, 16, 17, 24):
+        for fill in (b"\x00", b"\xa7", bytes(range(256))[:max(n, 1)]):
+            raw = (fill * (n // len(fill) + 1))[:n]
+            out, _ = decode_section(memoryview(encode_section(raw)), 0)
+            assert out == raw == _stored_reference(raw), (n, fill[:4])

@@ -1,0 +1,74 @@
+"""Ratchet comparator: regression detection, monotonic update, and the
+warn-and-skip rule for baseline keys absent from a fresh run (e.g. the
+device-lane throughput on CPU-only CI)."""
+
+import json
+
+from benchmarks.ratchet import TOLERANCE, compare, main
+
+
+def test_regression_detected():
+    failures, improvements, skipped = compare(
+        {"pack_gb_s": 1.0}, {"pack_gb_s": 3.0}, keys=("pack_gb_s",))
+    assert failures == [("pack_gb_s", 3.0, 1.0)]
+    assert improvements == [] and skipped == []
+
+
+def test_within_tolerance_passes():
+    failures, _, _ = compare(
+        {"pack_gb_s": 3.0 * TOLERANCE + 1e-9}, {"pack_gb_s": 3.0},
+        keys=("pack_gb_s",))
+    assert failures == []
+
+
+def test_improvement_reported():
+    _, improvements, _ = compare(
+        {"pack_gb_s": 4.0}, {"pack_gb_s": 3.0}, keys=("pack_gb_s",))
+    assert improvements == [("pack_gb_s", 3.0, 4.0)]
+
+
+def test_new_key_not_ratcheted():
+    # fresh produces a key the baseline has never seen: nothing to do
+    failures, improvements, skipped = compare(
+        {"new_metric": 1.0}, {}, keys=("new_metric",))
+    assert failures == [] and improvements == [] and skipped == []
+
+
+def test_baseline_only_key_warns_and_skips():
+    # the satellite case: a device-lane number ratcheted on a TPU/GPU
+    # machine, absent from a CPU-only fresh run — must skip, not fail
+    failures, improvements, skipped = compare(
+        {"pack_gb_s": 3.0},
+        {"pack_gb_s": 3.0, "device_pack_gb_s": 42.0},
+        keys=("pack_gb_s", "device_pack_gb_s"))
+    assert failures == []
+    assert skipped == [("device_pack_gb_s", 42.0)]
+
+
+def test_main_exit_codes_and_skip(tmp_path, capsys):
+    fresh = tmp_path / "fresh.json"
+    base = tmp_path / "base.json"
+    fresh.write_text(json.dumps({"pack_gb_s": 3.0, "v2_encode_gb_s": 1.0}))
+    base.write_text(json.dumps({"pack_gb_s": 3.0, "v2_encode_gb_s": 1.0,
+                                "device_pack_gb_s": 42.0}))
+    rc = main([str(fresh), "--baseline", str(base)])
+    out = capsys.readouterr().out
+    assert rc == 0
+    assert "WARNING device_pack_gb_s" in out
+    assert "ratchet: ok" in out
+    # a real regression still fails regardless of the skipped lane
+    fresh.write_text(json.dumps({"pack_gb_s": 0.1, "v2_encode_gb_s": 1.0}))
+    assert main([str(fresh), "--baseline", str(base)]) == 1
+
+
+def test_main_update_raises_baseline_monotonically(tmp_path):
+    fresh = tmp_path / "fresh.json"
+    base = tmp_path / "base.json"
+    fresh.write_text(json.dumps({"pack_gb_s": 5.0, "v2_encode_gb_s": 0.8}))
+    base.write_text(json.dumps({"pack_gb_s": 3.0, "v2_encode_gb_s": 0.9,
+                                "device_pack_gb_s": 42.0}))
+    assert main([str(fresh), "--baseline", str(base), "--update"]) == 0
+    updated = json.loads(base.read_text())
+    assert updated["pack_gb_s"] == 5.0          # improved: raised
+    assert updated["v2_encode_gb_s"] == 0.9     # within band: untouched
+    assert updated["device_pack_gb_s"] == 42.0  # skipped lane: untouched

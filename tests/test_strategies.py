@@ -1,0 +1,279 @@
+"""Pluggable shuffle strategies (repro.core.strategy): default-strategy
+bit-identity with the pre-seam engine, combiner semantics, per-strategy
+engine behavior (combining / push / merge), fault injection, and a
+cooperative rebalance mid-stream under every strategy."""
+
+import dataclasses
+import hashlib
+
+import numpy as np
+import pytest
+
+import benchmarks.strategies as S
+from repro.cluster import ElasticCluster
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig, EngineConfig,
+                        ExpressOneZoneStore, FaultyStore, Record, SimConfig,
+                        WorkloadConfig, simulate_async)
+from repro.core.recordbatch import RecordBatch
+from repro.core.strategy import (CombiningStrategy, DefaultStrategy,
+                                 LastWinsCombiner, PushStrategy,
+                                 SumU64Combiner, TwoRoundMergeStrategy,
+                                 make_strategy)
+from repro.core.workload import drive
+
+#: the benchmark's head-to-head geometry at the CI-quick duration: six
+#: instances over three AZs, Zipf(1.2) keys, columnar ingest
+QCFG = dataclasses.replace(S.CFG, duration_s=1.5)
+
+STRATEGY_NAMES = ("default", "combining", "push", "merge")
+
+
+@pytest.fixture(scope="module")
+def clean_runs():
+    """One clean run per strategy on the shared skewed workload
+    (module-scoped: every behavioral test below reads these)."""
+    return {name: S._run_strategy(name, QCFG, S.SCALE)
+            for name in STRATEGY_NAMES}
+
+
+# -- the seam itself ---------------------------------------------------------
+
+def test_default_strategy_is_bit_identical_to_pre_seam_engine():
+    """The acceptance pin: a default-strategy run must reproduce the
+    exact pre-PR digests (delivery multiset, latency samples, store
+    request counts, makespan) on both the batch-ingest and the
+    scalar/zonal configurations."""
+    def digest(eng):
+        h = hashlib.sha256()
+        for p in sorted(eng.out):
+            h.update(str(p).encode())
+            for r in sorted((bytes(r.key), bytes(r.value), r.timestamp_us)
+                            for r in eng.out[p]):
+                h.update(r[0])
+                h.update(r[1])
+                h.update(str(r[2]).encode())
+        h.update(repr([round(x, 12)
+                       for x in eng.metrics.record_latencies[:50]]).encode())
+        h.update(repr((eng.store.stats.puts, eng.store.stats.gets,
+                       eng.store.stats.put_bytes)).encode())
+        h.update(repr(round(eng.metrics.makespan_s, 9)).encode())
+        return h.hexdigest()
+
+    cfg = SimConfig(n_nodes=3, inst_per_node=2, n_az=3, duration_s=2.0,
+                    commit_interval_s=0.5, seed=13)
+    eng, _ = simulate_async(cfg, scale=0.002, exactly_once=True,
+                            key_skew=1.2, ingest_batch_records=256)
+    assert digest(eng) == ("61e106bb8413bd21037ee5453253a683"
+                           "35e565419477921f1b56ba67176387a4")
+    eng2, _ = simulate_async(cfg, scale=0.002, exactly_once=True,
+                             key_skew=1.2,
+                             store=ExpressOneZoneStore(seed=13, num_az=3))
+    assert digest(eng2) == ("3fa47d963ce97f02fc0a0b96e92ddf3e"
+                            "4a593d34fb1436bef83137c89d6c7e30")
+
+
+def test_make_strategy_resolves_names_instances_and_rejects_unknown():
+    assert type(make_strategy(None)) is DefaultStrategy
+    assert type(make_strategy("default")) is DefaultStrategy
+    assert type(make_strategy("combining")) is CombiningStrategy
+    assert type(make_strategy("push")) is PushStrategy
+    assert type(make_strategy("merge")) is TwoRoundMergeStrategy
+    inst = TwoRoundMergeStrategy(fan_in=4)
+    assert make_strategy(inst) is inst
+    with pytest.raises(ValueError, match="unknown shuffle strategy"):
+        make_strategy("pull")
+
+
+# -- combiners ---------------------------------------------------------------
+
+def _batch(triples):
+    return RecordBatch.from_records(
+        [Record(k, v, timestamp_us=t) for k, v, t in triples])
+
+
+def test_last_wins_keeps_latest_record_per_key_in_row_order():
+    b = _batch([(b"aaaaaaaa", b"v1", 0), (b"bbbbbbbb", b"v2", 1),
+                (b"aaaaaaaa", b"v3", 2), (b"cccccccc", b"v4", 3),
+                (b"bbbbbbbb", b"v5", 4)])
+    out, sel = LastWinsCombiner().combine(b)
+    assert list(sel) == [2, 3, 4]          # ascending last occurrences
+    assert [(out.key(i), out.value(i), int(out.timestamps[i]))
+            for i in range(len(out))] == [
+        (b"aaaaaaaa", b"v3", 2), (b"cccccccc", b"v4", 3),
+        (b"bbbbbbbb", b"v5", 4)]
+
+
+def test_last_wins_passes_through_when_all_keys_distinct():
+    b = _batch([(b"aaaaaaaa", b"v", 0), (b"bbbbbbbb", b"v", 1)])
+    assert LastWinsCombiner().combine(b) == (None, None)
+
+
+def test_last_wins_ragged_keys_take_the_memo_path_and_agree():
+    # ragged key widths defeat the void-view fast path; the dict memo
+    # fallback must produce the same latest-record-per-key answer
+    b = _batch([(b"a", b"v1", 0), (b"long-key", b"v2", 1),
+                (b"a", b"v3", 2), (b"long-key", b"v4", 3)])
+    out, sel = LastWinsCombiner().combine(b)
+    assert list(sel) == [2, 3]
+    assert [(out.key(i), out.value(i)) for i in range(len(out))] == [
+        (b"a", b"v3"), (b"long-key", b"v4")]
+
+
+def test_sum_u64_sums_word_vectors_per_key_modulo_2_64():
+    def words(*ws):
+        return b"".join(int(w % 2**64).to_bytes(8, "little") for w in ws)
+    b = _batch([(b"aaaaaaaa", words(1, 10), 0),
+                (b"bbbbbbbb", words(2, 20), 1),
+                (b"aaaaaaaa", words(2**64 - 1, 30), 2),  # forces wraparound
+                (b"bbbbbbbb", words(5, 40), 3)])
+    out, sel = SumU64Combiner().combine(b)
+    assert list(sel) == [2, 3]
+    assert out.value(0) == words(0, 40)    # 1 + (2^64-1) wraps to 0
+    assert out.value(1) == words(7, 60)
+    # representative rows keep the latest key/timestamp per group
+    assert [int(out.timestamps[i]) for i in range(2)] == [2, 3]
+
+
+def test_sum_u64_guards_pass_through_unsummable_shapes():
+    c = SumU64Combiner()
+    # ragged value widths
+    assert c.combine(_batch([(b"aaaaaaaa", b"x" * 8, 0),
+                             (b"aaaaaaaa", b"x" * 16, 1)])) == (None, None)
+    # width not a multiple of 8
+    assert c.combine(_batch([(b"aaaaaaaa", b"x" * 12, 0),
+                             (b"aaaaaaaa", b"x" * 12, 1)])) == (None, None)
+
+
+def test_combiners_are_deterministic():
+    rng = np.random.default_rng(3)
+    recs = [(bytes(rng.bytes(8)) if rng.random() < 0.5 else b"hot-key!",
+             bytes(rng.bytes(16)), i) for i in range(200)]
+    for combiner in (LastWinsCombiner(), SumU64Combiner()):
+        a, sa = combiner.combine(_batch(recs))
+        b, sb = combiner.combine(_batch(recs))
+        assert list(sa) == list(sb)
+        assert a.serialize_rows() == b.serialize_rows()
+
+
+# -- engine behavior per strategy -------------------------------------------
+
+def test_combining_delivery_matches_reference_combine(clean_runs):
+    eng, _, _ = clean_runs["combining"]
+    assert S._multiset(eng) == S._reference_combine(QCFG, S.SCALE)
+    st = eng.strategy.stats
+    assert st.records_combined > 0 and st.bytes_saved_logical > 0
+    assert (eng.metrics.records_delivered
+            == eng.metrics.records_in - st.records_combined)
+
+
+def test_combining_ships_fewer_bytes_than_default(clean_runs):
+    _, base_store, _ = clean_runs["default"]
+    _, comb_store, _ = clean_runs["combining"]
+    assert comb_store.stats.put_bytes < base_store.stats.put_bytes
+
+
+def test_push_placement_eliminates_cross_az_gets(clean_runs):
+    eng_d, store_d, _ = clean_runs["default"]
+    eng_p, store_p, _ = clean_runs["push"]
+    assert store_d.stats.cross_az_gets > 0     # default really pays them
+    assert store_p.stats.cross_az_gets == 0
+    # the routing bytes moved to PUT time and are surfaced for pricing
+    assert eng_p.strategy.stats.push_cross_az_bytes > 0
+    assert S._multiset(eng_p) == S._multiset(eng_d)
+
+
+def test_merge_compaction_divides_gets_and_notifications(clean_runs):
+    eng_d, store_d, _ = clean_runs["default"]
+    eng_m, store_m, _ = clean_runs["merge"]
+    st = eng_m.strategy.stats
+    assert st.merged_blobs > 0
+    assert st.merged_inputs >= 2 * st.merged_blobs   # real fan-in
+    assert st.merge_fallback_notes == 0              # clean store: no falls
+    assert store_d.stats.gets >= 3 * max(store_m.stats.gets, 1)
+    assert len(eng_d.published) >= 3 * len(eng_m.published)
+    assert S._multiset(eng_m) == S._multiset(eng_d)
+
+
+def test_every_strategy_is_exactly_once_on_a_clean_store(clean_runs):
+    for name, (eng, _, _) in clean_runs.items():
+        assert eng.metrics.duplicates_delivered == 0, name
+
+
+# -- fault injection ---------------------------------------------------------
+
+@pytest.mark.parametrize("name", STRATEGY_NAMES)
+def test_strategies_survive_throttling_and_transients(name, clean_runs):
+    """Each strategy under a throttling + transient-fault store must
+    deliver exactly what its clean run delivered — zero lost, zero
+    duplicated (for merge the compactor's own fetches/PUTs retry or
+    fall back to the original notifications, never dropping them)."""
+    store = FaultyStore(ExpressOneZoneStore(seed=QCFG.seed, num_az=QCFG.n_az),
+                        seed=5, throttle_rate=5.0, throttle_burst=3,
+                        prefix_len=2, transient_p=0.15)
+    # this fault intensity needs a longer retry budget than the default
+    # 8 attempts — the test's contract is zero loss, so every retry
+    # chain must be allowed to outlast the throttle window
+    ecfg = EngineConfig(commit_interval_s=QCFG.commit_interval_s,
+                        max_attempts=16)
+    eng, _ = simulate_async(QCFG, scale=S.SCALE, exactly_once=True,
+                            key_skew=S.KEY_SKEW, store=store,
+                            ingest_batch_records=S.BATCH_RECORDS,
+                            strategy=name, engine_cfg=ecfg)
+    assert store.faults.total > 0              # faults actually fired
+    assert eng.metrics.duplicates_delivered == 0
+    assert eng.metrics.uploads_aborted == 0
+    assert eng.metrics.fetches_aborted == 0
+    clean_eng, _, _ = clean_runs[name]
+    assert S._multiset(eng) == S._multiset(clean_eng)
+    if name == "merge":
+        # under store pressure the compactor must degrade by delivering
+        # the ORIGINAL notifications, never by dropping records
+        assert eng.strategy.stats.merge_fallback_notes > 0
+
+
+# -- cooperative rebalance mid-stream ---------------------------------------
+
+RCFG = BlobShuffleConfig(batch_bytes=48 * 1024, max_interval_s=0.2,
+                         num_partitions=18, num_az=3)
+RWL = WorkloadConfig(arrival_rate=2000.0, duration_s=1.5, record_bytes=300,
+                     key_skew=1.2, seed=11)
+
+
+def _rebalance_run(strategy=None, join_t=0.4):
+    eng = AsyncShuffleEngine(RCFG, EngineConfig(commit_interval_s=0.1),
+                             n_instances=4, seed=7, exactly_once=True,
+                             strategy=strategy)
+    cluster = ElasticCluster(eng, mode="cooperative",
+                             heartbeat_timeout_s=0.15)
+    if join_t is not None:
+        eng.loop.at(join_t, cluster.add_worker)
+    drive(eng, RWL, batch_records=64)
+    return eng, cluster, eng.run()
+
+
+@pytest.mark.parametrize("name", STRATEGY_NAMES)
+def test_strategies_survive_a_cooperative_rebalance_mid_stream(name):
+    """A worker joins mid-stream under each strategy: the cooperative
+    rebalance must stay exactly-once and deliver bit-identically to the
+    same strategy's static-cluster run (which for default/push/merge is
+    also the default static delivery)."""
+    static_eng, _, ms = _rebalance_run(strategy=name, join_t=None)
+    eng, cluster, m = _rebalance_run(strategy=name)
+    events = [e for e in cluster.rebalancer.events if not e.superseded]
+    assert [e.reason for e in events] == ["join"]
+    assert m.duplicates_delivered == ms.duplicates_delivered == 0
+    assert m.records_delivered == ms.records_delivered
+    assert S._multiset(eng) == S._multiset(static_eng)
+
+
+def test_push_follows_the_assignors_owner_az_after_rebalance():
+    """Push placement must re-snapshot ownership when assignment
+    changes: with a cluster attached, ``partition_target_az`` is the
+    live owner's AZ, not the static partition→AZ map."""
+    eng, cluster, _ = _rebalance_run(strategy="push")
+    strat = eng.strategy
+    for p, st in cluster.parts.items():
+        owner = st.owner
+        if owner is not None and cluster.membership.is_alive_now(owner):
+            assert (strat.partition_target_az(p)
+                    == cluster.membership.workers[owner].az)
