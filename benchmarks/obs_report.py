@@ -1,0 +1,294 @@
+"""Latency-decomposition report: where does p95 come from, per strategy?
+
+Runs the strategies suite's Zipf-skewed workload through the engine once
+per strategy with observability enabled and decomposes end-to-end
+latency into its five exact stages (batch_wait + upload + commit_wait +
+notify + fetch — adjacent lifecycle timestamp differences, so per-record
+stage sums equal the end-to-end sample by construction). This reproduces
+the paper's latency-breakdown analysis: at small batch sizes the batch
+wait dominates; as blobs grow the PUT and the commit-aligned
+notification take over (§4/Fig. 6 of the BlobShuffle paper).
+
+Every run doubles as the observability layer's own acceptance gate:
+
+  * **bit-identity** — each observed run's delivery digest must equal
+    the unobserved run's (hooks never schedule events or consume RNG);
+  * **conservation** — the end-of-run checker must report zero violated
+    laws for every strategy;
+  * **reconciliation** — per-strategy stage mean sums must equal the
+    end-to-end mean to float precision, with zero unattributed records;
+  * **sketch accuracy** — the e2e p95 from the quantile sketch must be
+    within 2% of ``np.percentile`` over the exact latency list;
+  * **overhead** — best-of-N CPU time of an observed run over an
+    unobserved one, timed in a fresh subprocess at an amortizing record
+    density, must stay under 1.10 (the <10% CI gate);
+  * **windowed query** — an elastic run answers "p95 during the
+    rebalance" from recorded marks.
+
+Writes ``BENCH_obs.json`` (every field documented under ``_doc``) and
+the sampled Chrome-trace artifact ``TRACE_obs.json`` (load it in
+``chrome://tracing`` or https://ui.perfetto.dev).
+"""
+
+from __future__ import annotations
+
+import gc
+import hashlib
+import json
+import subprocess
+import sys
+import time
+from typing import Dict, List, Tuple
+
+import numpy as np
+
+import benchmarks.strategies as S
+from repro.cluster import ElasticCluster
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig, EngineConfig,
+                        ExpressOneZoneStore, WorkloadConfig, simulate_async)
+from repro.core.workload import drive
+from repro.obs import STAGES, ObsConfig
+
+Row = Tuple[str, float, str]
+
+STRATEGY_NAMES = ("default", "combining", "push", "merge")
+
+#: best-of-N CPU-time pairs for the overhead gate (min over runs is
+#: robust to noise; the virtual-clock work is deterministic)
+OVERHEAD_RUNS = 9
+
+#: record-rate scale for the overhead pairs — 2x the simulator default
+#: (~19 records/blob, still far sparser than realistic blobs), so the
+#: fixed per-delivery obs cost amortizes as it would in any deployment
+OVERHEAD_SCALE = 0.02
+
+#: written into the JSON itself under "_doc" so the CI gates (and the
+#: reader) share one definition of every field
+FIELD_DOCS = {
+    "quick": "true when the run used the --quick smoke geometry",
+    "stages": "the exact decomposition order: e2e = sum of these stages "
+              "(adjacent blob-lifecycle timestamp differences)",
+    "strategies":
+        "per-strategy report: stage p50/p95/mean seconds from the "
+        "windowed quantile sketches, the e2e quantiles, sum_check "
+        "(stage-mean sum vs e2e mean, attributed record counts), "
+        "records_delivered, the dominant p95 stage, conservation "
+        "(laws checked / violations), digest_matches_unobserved, and "
+        "sketch_p95_rel_err vs np.percentile over the full latency list",
+    "bit_identical_all":
+        "every strategy's observed run delivered the exact digest of "
+        "its unobserved run (gate: must be true — obs hooks never "
+        "schedule events or consume RNG)",
+    "reconciliation_ok":
+        "every strategy's stage mean sum equals its e2e mean to 1e-9 "
+        "relative with zero unattributed records (gate: must be true)",
+    "conservation_violations_total":
+        "violated conservation laws summed over all strategy runs "
+        "(gate: must be 0)",
+    "sketch_p95_rel_err_max":
+        "max over strategies of |sketch p95 - np.percentile p95| / "
+        "exact p95 (gate: < 0.02, the sketch's acceptance bound)",
+    "overhead_ratio":
+        "best-of-N CPU seconds (process_time — immune to scheduler "
+        "contention on shared CI runners; the simulation is "
+        "single-threaded CPU work) of an observed default-strategy run "
+        "/ unobserved (gate: < 1.10, the <10% overhead bound). Timed "
+        "in a freshly spawned subprocess (pyperf-style isolation — the "
+        "ratio must not depend on heap state left by earlier suites) "
+        "at 2x the simulator's default record-rate scale "
+        "(~19 records/blob — still far sparser than realistic blobs) "
+        "because obs cost is fixed per delivery and record volume "
+        "amortizes it; the shrunk CI-quick scale (~5 records/blob) "
+        "would measure mostly per-delivery Python call overhead that "
+        "no real deployment density exhibits",
+    "overhead_scale": "record-rate scale factor used for the overhead "
+                      "pair (2x simulate_async's default)",
+    "obs_on_best_s": "best-of-N CPU seconds, observability enabled",
+    "obs_off_best_s": "best-of-N CPU seconds, observability disabled",
+    "rebalance":
+        "windowed-query demo from a cooperative-rebalance run: e2e p95 "
+        "inside the [trigger, complete+window] mark window vs the whole "
+        "run (answered from per-window sketch merges, not bespoke code)",
+    "trace_events": "events in the sampled Chrome-trace artifact "
+                    "TRACE_obs.json (1-in-N blobs, crc32-deterministic)",
+}
+
+
+def _digest(eng) -> str:
+    """Same digest as tests/test_strategies.py: delivery multiset,
+    latency samples, store request counts, makespan."""
+    h = hashlib.sha256()
+    for p in sorted(eng.out):
+        h.update(str(p).encode())
+        for r in sorted((bytes(r.key), bytes(r.value), r.timestamp_us)
+                        for r in eng.out[p]):
+            h.update(r[0])
+            h.update(r[1])
+            h.update(str(r[2]).encode())
+    h.update(repr([round(x, 12)
+                   for x in eng.metrics.record_latencies[:50]]).encode())
+    h.update(repr((eng.store.stats.puts, eng.store.stats.gets,
+                   eng.store.stats.put_bytes)).encode())
+    h.update(repr(round(eng.metrics.makespan_s, 9)).encode())
+    return h.hexdigest()
+
+
+def _run(name: str, cfg, scale: float, obs):
+    store = ExpressOneZoneStore(seed=cfg.seed, num_az=cfg.n_az)
+    eng, _ = simulate_async(cfg, scale=scale, exactly_once=True,
+                            key_skew=S.KEY_SKEW, store=store,
+                            ingest_batch_records=S.BATCH_RECORDS,
+                            strategy=name, obs=obs)
+    return eng
+
+
+def _rebalance_window(quick: bool) -> dict:
+    """Cooperative rebalance mid-stream; the windowed-query demo."""
+    cfg = BlobShuffleConfig(batch_bytes=48 * 1024, max_interval_s=0.2,
+                            num_partitions=18, num_az=3)
+    wl = WorkloadConfig(arrival_rate=2000.0,
+                        duration_s=1.0 if quick else 1.5,
+                        record_bytes=300, key_skew=1.2, seed=11)
+    eng = AsyncShuffleEngine(cfg, EngineConfig(commit_interval_s=0.1),
+                             n_instances=4, seed=7, exactly_once=True,
+                             obs=True)
+    cluster = ElasticCluster(eng, mode="cooperative",
+                             heartbeat_timeout_s=0.15)
+    eng.loop.at(0.4, cluster.add_worker)
+    drive(eng, wl, batch_records=64)
+    eng.run()
+    o = eng.obs
+    t0 = o.registry.marks_named("rebalance_trigger:")[0][0]
+    t1 = o.registry.marks_named("rebalance_complete")[-1][0]
+    win = o.cfg.window_s
+    p95_rebal = o.e2e_percentile(95, t0, t1 + win)
+    return {"trigger_s": t0, "complete_s": t1,
+            "p95_during_rebalance_s": p95_rebal,
+            "p95_whole_run_s": o.e2e_percentile(95),
+            "conservation_violations": len(o.report.violations)}
+
+
+def _overhead_main() -> None:
+    """Overhead timing pairs, run in a fresh subprocess so the heap is
+    clean and the measurement is independent of whatever ran before.
+    Interleaved on/off pairs so drift hits both sides equally; prints a
+    JSON line the parent parses."""
+    cfg, _ = S._sim_args(True)
+    _run("default", cfg, OVERHEAD_SCALE, obs=None)      # warm
+    offs, ons = [], []
+    gc.collect()
+    gc.disable()
+    try:
+        for _ in range(OVERHEAD_RUNS):
+            gc.collect()
+            t = time.process_time()
+            _run("default", cfg, OVERHEAD_SCALE, obs=None)
+            offs.append(time.process_time() - t)
+            gc.collect()
+            t = time.process_time()
+            _run("default", cfg, OVERHEAD_SCALE, obs=True)
+            ons.append(time.process_time() - t)
+    finally:
+        gc.enable()
+    print(json.dumps({"offs": offs, "ons": ons}))
+
+
+def run(quick: bool = False) -> List[Row]:
+    cfg, scale = S._sim_args(quick)
+    rows: List[Row] = []
+    results: Dict[str, dict] = {}
+    violations_total = 0
+    rel_errs, identical, reconciled = [], [], []
+    trace_eng = None
+
+    for name in STRATEGY_NAMES:
+        obs_cfg = ObsConfig(trace_sample_every=4)
+        eng = _run(name, cfg, scale, obs=obs_cfg)
+        eng_off = _run(name, cfg, scale, obs=None)
+        d = eng.obs.stage_decomposition(qs=(50, 95))
+        chk = d["sum_check"]
+        rep = eng.obs.report
+        exact_p95 = float(np.percentile(eng.metrics.record_latencies, 95))
+        rel = abs(d["e2e"]["p95_s"] - exact_p95) / exact_p95
+        same = _digest(eng) == _digest(eng_off)
+        recon = (chk["unattributed_records"] == 0
+                 and abs(chk["stage_mean_sum_s"] - chk["e2e_mean_s"])
+                 <= 1e-9 * chk["e2e_mean_s"])
+        dominant = max(STAGES, key=lambda s: d[s]["p95_s"])
+        results[name] = {
+            "stages": {s: d[s] for s in STAGES},
+            "e2e": d["e2e"],
+            "sum_check": chk,
+            "records_delivered": eng.metrics.records_delivered,
+            "dominant_p95_stage": dominant,
+            "conservation": rep.to_dict(),
+            "digest_matches_unobserved": same,
+            "sketch_p95_rel_err": rel,
+        }
+        violations_total += len(rep.violations)
+        rel_errs.append(rel)
+        identical.append(same)
+        reconciled.append(recon)
+        if name == "default":
+            trace_eng = eng
+        frac = {s: d[s]["mean_s"] / chk["e2e_mean_s"] for s in STAGES}
+        rows.append((f"obs.{name}", d["e2e"]["p95_s"] * 1e6,
+                     " ".join(f"{s}={frac[s]:.0%}" for s in STAGES)
+                     + f" dom={dominant} viol={len(rep.violations)}"))
+
+    rebalance = _rebalance_window(quick)
+    violations_total += rebalance["conservation_violations"]
+
+    trace_eng.obs.tracer.dump("TRACE_obs.json")
+    n_events = len(trace_eng.obs.tracer.events)
+
+    # -- overhead: observed vs unobserved, best of N ----------------------
+    # measured in a fresh subprocess (pyperf-style process isolation: the
+    # ratio is then independent of heap state the strategy runs above
+    # leave behind) at an amortizing record density — see FIELD_DOCS
+    proc = subprocess.run(
+        [sys.executable, "-c",
+         "from benchmarks.obs_report import _overhead_main; "
+         "_overhead_main()"],
+        capture_output=True, text=True, check=True)
+    pair = json.loads(proc.stdout.splitlines()[-1])
+    off_s, on_s = min(pair["offs"]), min(pair["ons"])
+    overhead = on_s / off_s
+
+    out = {
+        "quick": quick,
+        "stages": list(STAGES),
+        "strategies": results,
+        "bit_identical_all": all(identical),
+        "reconciliation_ok": all(reconciled),
+        "conservation_violations_total": violations_total,
+        "sketch_p95_rel_err_max": max(rel_errs),
+        "overhead_ratio": overhead,
+        "overhead_scale": OVERHEAD_SCALE,
+        "obs_on_best_s": on_s,
+        "obs_off_best_s": off_s,
+        "rebalance": rebalance,
+        "trace_events": n_events,
+    }
+    out["_doc"] = {k: FIELD_DOCS[k] for k in out if k in FIELD_DOCS}
+    with open("BENCH_obs.json", "w") as f:
+        json.dump(out, f, indent=2, sort_keys=True)
+        f.write("\n")
+
+    rows.append(("obs.gates", 0.0,
+                 f"bit_identical={out['bit_identical_all']} "
+                 f"reconciled={out['reconciliation_ok']} "
+                 f"viol={violations_total} "
+                 f"sketch_err={out['sketch_p95_rel_err_max']:.4f} "
+                 f"overhead={overhead:.3f} trace_events={n_events}"))
+    return rows
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,10 @@ SUITES = {
                   "workload: default vs map-side combining vs push-based "
                   "AZ-local vs two-round merge (writes "
                   "BENCH_strategies.json)",
+    "obs": "observability acceptance: per-strategy latency decomposition "
+           "with bit-identity, conservation, reconciliation, sketch "
+           "accuracy and <10% overhead gates (writes BENCH_obs.json + "
+           "TRACE_obs.json)",
     "tpu": "TPU shuffle adaptation",
     "kernels": "Pallas kernel microbenchmarks",
     "dryrun": "roofline summary of results/dryrun",
@@ -81,6 +85,9 @@ def main() -> None:
     if args.suite in ("all", "strategies"):
         from benchmarks import strategies
         rows += strategies.run(quick=args.quick)  # BENCH_strategies.json
+    if args.suite in ("all", "obs"):
+        from benchmarks import obs_report
+        rows += obs_report.run(quick=args.quick)  # BENCH_obs + TRACE_obs
     if args.suite in ("all", "paper"):
         from benchmarks import paper_figs as F
         rows += F.fig5_latency_cdf()

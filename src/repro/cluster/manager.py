@@ -186,6 +186,9 @@ class ElasticCluster:
         self._accrue(self.loop.now)
         if self._bootstrapping:
             return
+        obs = self.engine.obs
+        if obs is not None:
+            obs.mark(f"rebalance_trigger:{kind}", self.loop.now)
         self.rebalancer.trigger(kind, self.loop.now)
 
     # -- data plane --------------------------------------------------------
@@ -285,6 +288,9 @@ class ElasticCluster:
         # the assignment snapshot moved: strategies routing blob
         # placement by owner AZ (push-based shuffle) re-snapshot, and
         # the batchers drop their cached partition→AZ tables
+        obs = self.engine.obs
+        if obs is not None:
+            obs.mark("rebalance_complete", self.loop.now)
         self.engine.on_assignment_changed()
         self._align_caches()
 

@@ -87,6 +87,10 @@ class BatcherStats:
 class Batcher:
     """One Batcher per stream thread (buffers shared across its tasks)."""
 
+    #: optional repro.obs.Observability side-table, attached by the
+    #: engine when observability is enabled (never schedules events)
+    obs = None
+
     def __init__(self, cfg: BlobShuffleConfig,
                  partition_to_az: Callable[[int], int],
                  partitioner: Callable[[bytes], int],
@@ -350,3 +354,5 @@ class Batcher:
         self.stats.blob_bytes += blob.size
         setattr(self.stats, f"finalize_{why}",
                 getattr(self.stats, f"finalize_{why}") + 1)
+        if self.obs is not None:
+            self.obs.on_batch_finalized(az, blob, why, now)

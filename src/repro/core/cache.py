@@ -94,6 +94,10 @@ class DistributedCache:
     """Per-AZ cache cluster: members own key-ranges; reads route through
     the owner, which fetches from object storage at most once per entry."""
 
+    #: optional repro.obs.Observability side-table, attached by the
+    #: engine when observability is enabled
+    obs = None
+
     def __init__(self, az: int, members: int, capacity_per_member: int,
                  store: BlobStore, cache_on_write: bool = True):
         self.az = az
@@ -197,6 +201,8 @@ class DistributedCache:
         Raises ``StoreError`` without counting if the request fails."""
         size, lat = self.store.begin_get(blob_id, now=now, az=self.az)
         self.stats.store_gets += 1
+        if self.obs is not None:
+            self.obs.on_store_get(self.az, size, lat, now)
         return size, lat
 
     def read(self, blob_id: str, now: float = 0.0) -> Tuple[bytes, float, str]:

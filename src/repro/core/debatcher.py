@@ -28,6 +28,10 @@ class DebatcherStats:
 class Debatcher:
     """One Debatcher per stream thread in the destination AZ."""
 
+    #: optional repro.obs.Observability side-table, attached by the
+    #: engine when observability is enabled
+    obs = None
+
     def __init__(self, az: int, cache: DistributedCache,
                  local: Optional[LocalCache] = None,
                  exactly_once: bool = True):
@@ -63,6 +67,9 @@ class Debatcher:
         self.stats.records_out += len(recs)
         self.stats.bytes_out += note.byte_range.length
         self.inflight_until = max(self.inflight_until, now + lat)
+        if self.obs is not None:
+            self.obs.on_extract(self.az, src, len(recs),
+                                note.byte_range.length, now)
         return recs
 
     def complete_batch(self, note: Notification, payload, lat: float,
@@ -76,6 +83,9 @@ class Debatcher:
         self.stats.records_out += len(batch)
         self.stats.bytes_out += note.byte_range.length
         self.inflight_until = max(self.inflight_until, now + lat)
+        if self.obs is not None:
+            self.obs.on_extract(self.az, src, len(batch),
+                                note.byte_range.length, now)
         return batch
 
     def process(self, note: Notification, now: float

@@ -55,6 +55,8 @@ from repro.core.recordbatch import RecordBatch, default_partitioner_batch
 from repro.core.records import Record, default_partitioner
 from repro.core.stores import BlobStore, SimulatedS3, SlowDownError, StoreError
 from repro.core.strategy import make_strategy
+from repro.obs import make_observability
+from repro.obs.sketch import QuantileSketch
 
 GiB = 1024 ** 3
 
@@ -87,6 +89,10 @@ class EngineConfig:
     # -- hedged GETs --------------------------------------------------------
     hedge_quantile: Optional[float] = None  # e.g. 95.0; None disables
     hedge_min_samples: int = 20        # observed GETs before hedging arms
+    # cross-check the streaming hedge-threshold sketch against an exact
+    # np.percentile pass on every refresh (test/debug only: restores the
+    # O(n log n) cost the sketch removes)
+    hedge_debug_exact: bool = False
     # -- retention ----------------------------------------------------------
     retention_sweep_s: Optional[float] = None  # periodic expiry sweep
 
@@ -114,6 +120,11 @@ class ShuffleMetrics:
     put_retries: int = 0
     get_retries: int = 0
     uploads_aborted: int = 0           # blobs dropped after max_attempts
+    uploads_aborted_bytes: int = 0
+    # blobs that died with a crashed instance: queued in its upload lane,
+    # or in flight when the epoch bumped (their completion events no-op)
+    uploads_lost: int = 0
+    uploads_lost_bytes: int = 0
     fetches_aborted: int = 0
     throttle_events: int = 0           # 503 SlowDown responses observed
     hedges_issued: int = 0
@@ -161,12 +172,16 @@ class AsyncShuffleEngine:
                  engine_cfg: Optional[EngineConfig] = None, *,
                  n_instances: int = 3, store: Optional[BlobStore] = None,
                  seed: int = 0, exactly_once: bool = True,
-                 strategy=None):
+                 strategy=None, obs=None):
         self.cfg = cfg
         self.ecfg = engine_cfg or EngineConfig()
         self.n_instances = n_instances
         self.exactly_once = exactly_once
         self.loop = EventLoop()
+        # opt-in observability (None | True | ObsConfig | Observability):
+        # pure side-tables — hooks never schedule events or consume RNG,
+        # so observed and unobserved runs are bit-identical
+        self.obs = make_observability(obs)
         self.store = store or SimulatedS3(seed=seed,
                                           retention_s=cfg.retention_s)
         self.caches = [
@@ -181,6 +196,11 @@ class AsyncShuffleEngine:
             self.debatchers.append(
                 Debatcher(az, self.caches[az], local,
                           exactly_once=exactly_once))
+        if self.obs is not None:
+            for c in self.caches:
+                c.obs = self.obs
+            for d in self.debatchers:
+                d.obs = self.obs
         # elastic-cluster hook: when an ``ElasticCluster`` is attached,
         # notification fan-out routes through its durable log instead of
         # the fixed-delay direct delivery, and instances can join/leave
@@ -217,6 +237,12 @@ class AsyncShuffleEngine:
         self._retry_rng = np.random.default_rng(
             np.random.SeedSequence([seed, 0x5E7]))
         self._hedge_cached: Optional[Tuple[int, float]] = None
+        # streaming GET-latency sketch backing the hedge threshold —
+        # maintained only when hedging can read it, so the no-hedge hot
+        # path is untouched
+        self._get_sketch = (QuantileSketch()
+                            if self.ecfg.hedge_quantile is not None
+                            else None)
         # source arrival bookkeeping for end-to-end latency
         self._arrivals: Dict[Tuple[int, int], Deque[float]] = \
             defaultdict(deque)
@@ -268,6 +294,7 @@ class AsyncShuffleEngine:
                     partitioner_batch=lambda batch: (
                         default_partitioner_batch(
                             batch, cfg.num_partitions)))
+        b.obs = self.obs
         self.batchers.append(b)
         self.coordinators.append(
             CommitCoordinator(b, self.debatchers, self._make_publisher(i)))
@@ -334,6 +361,8 @@ class AsyncShuffleEngine:
         self._arrivals[(i, part)].append(now)
         self.coordinators[i].process(rec, now)
         self._arm_flush_timer(i, az)
+        if self.obs is not None:
+            self.obs.on_ingest(self._inst_az[i], 1, now)
         self._note_ingested(1)
 
     def submit_batch(self, t: float, batch: RecordBatch,
@@ -382,6 +411,8 @@ class AsyncShuffleEngine:
         az_table = b._partition_az_table()
         for az in dict.fromkeys(int(a) for a in az_table[parts]):
             self._arm_flush_timer(i, az)
+        if self.obs is not None:
+            self.obs.on_ingest(self._inst_az[i], n, now)
         self._note_ingested(n0)
 
     def _arm_flush_timer(self, i: int, az: int) -> None:
@@ -440,6 +471,13 @@ class AsyncShuffleEngine:
                     [q.popleft() for _ in range(n)]
             self.coordinators[i].note_upload_started(blob.blob_id)
             self._upload_q[i].append((blob, notes, 0))
+            if self.obs is not None:
+                first = min(
+                    (a[0] for part in counts
+                     if (a := self._blob_arrivals[(blob.blob_id, part)])),
+                    default=None)
+                self.obs.on_blob_handed_off(blob, self._inst_az[i],
+                                            first, now)
             self._pump_uploads(i)
         return uploader
 
@@ -473,12 +511,15 @@ class AsyncShuffleEngine:
         """Failure observed: release the lane slot and either requeue the
         blob after backoff or abort it past ``max_attempts``."""
         if epoch != self._epoch[i]:
+            self.metrics.uploads_lost += 1
+            self.metrics.uploads_lost_bytes += blob.size
             return
         self._uploads_inflight[i] -= 1
         if attempt + 1 >= self.ecfg.max_attempts:
             # persistent failure: drop the blob so commits don't hang (the
             # loss is visible in uploads_aborted and records_delivered)
             self.metrics.uploads_aborted += 1
+            self.metrics.uploads_aborted_bytes += blob.size
             c = self.coordinators[i]
             c.note_upload_aborted(blob.blob_id)
             if c.try_finish_commit(self.loop.now):
@@ -493,6 +534,8 @@ class AsyncShuffleEngine:
                         notes: List[Notification], attempt: int,
                         epoch: int) -> None:
         if epoch != self._epoch[i]:
+            self.metrics.uploads_lost += 1
+            self.metrics.uploads_lost_bytes += blob.size
             return
         self._upload_q[i].appendleft((blob, notes, attempt))
         self._pump_uploads(i)
@@ -500,7 +543,10 @@ class AsyncShuffleEngine:
     def _upload_done(self, i: int, blob: Blob, notes: List[Notification],
                      lat: float, epoch: int) -> None:
         if epoch != self._epoch[i]:
-            return  # instance crashed mid-upload: connection died with it
+            # instance crashed mid-upload: connection died with it
+            self.metrics.uploads_lost += 1
+            self.metrics.uploads_lost_bytes += blob.size
+            return
         now = self.loop.now
         inst_az = self._inst_az[i]
         put_az = self.strategy.put_az(blob, inst_az)
@@ -511,6 +557,9 @@ class AsyncShuffleEngine:
             # the push (once per durable blob, not per attempt)
             self.strategy.stats.push_cross_az_bytes += blob.size
         self.metrics.put_latencies.append(lat)
+        if self.obs is not None:
+            self.obs.on_blob_durable(blob.blob_id, blob.size, put_az, lat,
+                                     now)
         self._uploads_inflight[i] -= 1
         if self.cfg.cache_on_write:
             # write-through lands in the WRITER's AZ cluster (paper §3.3):
@@ -537,6 +586,8 @@ class AsyncShuffleEngine:
             # count as published downstream
             return
         self.published.append(note)
+        if self.obs is not None:
+            self.obs.on_note_published(note, self.loop.now)
         if self.cluster is not None:
             # elastic mode: the notification becomes a durable log entry
             # and is delivered to the partition's current OWNER (which may
@@ -610,6 +661,14 @@ class AsyncShuffleEngine:
         self._get_waiters[key] = []
         self._lead_get(az, f)
 
+    def _note_get_latency(self, lat: float) -> None:
+        """Record one issued store GET's latency (lead, hedge, or merge
+        compactor read): the list feeds end-of-run summaries, the sketch
+        feeds the streaming hedge threshold."""
+        self.metrics.get_latencies.append(lat)
+        if self._get_sketch is not None:
+            self._get_sketch.add(lat)
+
     def _lead_get(self, az: int, f: _Fetch) -> None:
         """Issue (or re-issue after a failure) the leading store GET."""
         try:
@@ -626,7 +685,7 @@ class AsyncShuffleEngine:
             # miss — retrying cannot help, abort the whole flight
             self._abort_flight(az, f)
             return
-        self.metrics.get_latencies.append(lat)
+        self._note_get_latency(lat)
         done = self.loop.now + lat
         self.loop.after(lat, self._store_get_done, az, f)
         hedge_at = self._hedge_threshold()
@@ -635,15 +694,28 @@ class AsyncShuffleEngine:
 
     def _hedge_threshold(self) -> Optional[float]:
         q = self.ecfg.hedge_quantile
-        n = len(self.metrics.get_latencies)
-        if q is None or n < self.ecfg.hedge_min_samples:
+        if q is None:
             return None
-        # refresh every 32 samples: O(n log n) per refresh instead of a
-        # full percentile pass on every issued GET
+        sk = self._get_sketch
+        n = sk.count
+        if n < self.ecfg.hedge_min_samples:
+            return None
+        # the threshold comes from the streaming sketch: O(1) per
+        # observed GET, O(bins) per refresh — the full-list
+        # np.percentile pass this used to take grew O(n log n) with the
+        # run. Refreshing every 32 samples keeps the threshold stable
+        # between refreshes (same cadence as before).
         bucket = n // 32
         if self._hedge_cached is None or self._hedge_cached[0] != bucket:
-            self._hedge_cached = (
-                bucket, float(np.percentile(self.metrics.get_latencies, q)))
+            est = float(sk.percentile(q))
+            if self.ecfg.hedge_debug_exact:
+                exact = float(np.percentile(self.metrics.get_latencies, q))
+                if exact > 0.0 and abs(est - exact) > 0.02 * exact:
+                    raise AssertionError(
+                        f"hedge sketch diverged from exact percentile: "
+                        f"sketch {est:.6g} vs exact {exact:.6g} at "
+                        f"q={q} (n={n})")
+            self._hedge_cached = (bucket, est)
         return self._hedge_cached[1]
 
     def _hedge_fire(self, az: int, f: _Fetch, primary_done: float) -> None:
@@ -657,7 +729,7 @@ class AsyncShuffleEngine:
                                                      now=self.loop.now)
         except (StoreError, KeyError):
             return      # hedge hit a fault: the primary is still running
-        self.metrics.get_latencies.append(lat)
+        self._note_get_latency(lat)
         if self.loop.now + lat < primary_done:
             self.metrics.hedges_won += 1
             self.loop.after(lat, self._store_get_done, az, f)
@@ -738,10 +810,15 @@ class AsyncShuffleEngine:
             (f.note.blob_id, f.note.partition), None)
         if arrivals is None:
             self.metrics.duplicates_delivered += len(recs)
+            if self.obs is not None:
+                self.obs.on_duplicate_delivery(az, len(recs), now)
         else:
             for t0 in arrivals:
                 self.metrics.record_latencies.append(now - t0)
                 self.metrics.record_latency_times.append(now)
+            if self.obs is not None:
+                self.obs.on_delivery(f.note, f.enqueued_at, arrivals,
+                                     src, az, now)
         self._t_done = max(self._t_done, now)
         self._fetch_inflight[az] -= 1
         self._pump_fetches(az)
@@ -805,8 +882,15 @@ class AsyncShuffleEngine:
     def _fail(self, i: int, permanent: bool = False) -> None:
         now = self.loop.now
         self._epoch[i] += 1
+        for blob, _notes, _attempt in self._upload_q[i]:
+            # queued blobs die with the lane (in-flight ones are counted
+            # when their completion events observe the stale epoch)
+            self.metrics.uploads_lost += 1
+            self.metrics.uploads_lost_bytes += blob.size
         self._upload_q[i].clear()
         self._uploads_inflight[i] = 0
+        if self.obs is not None:
+            self.obs.mark(f"crash:i{i}", now)
         if permanent:
             self.active[i] = False
         replay = self.coordinators[i].fail_and_restart(now)
@@ -834,4 +918,6 @@ class AsyncShuffleEngine:
         # exact even when nothing expired within the run
         self.store.accrue_storage(self.loop.now)
         self.metrics.makespan_s = self._t_done
+        if self.obs is not None:
+            self.obs.finalize_run(self)
         return self.metrics

@@ -90,7 +90,7 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
                    latency: Optional[LatencyModel] = None,
                    store: Optional[BlobStore] = None,
                    ingest_batch_records: Optional[int] = None,
-                   strategy=None
+                   strategy=None, obs=None
                    ) -> "tuple[AsyncShuffleEngine, dict]":
     """Measured (not modeled) run of a ``SimConfig`` workload through the
     event-driven engine, scaled down by ``scale`` in offered rate and
@@ -111,6 +111,9 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
     ``ShuffleStrategy`` instance — see ``repro.core.strategy``):
     "combining" pre-aggregates hot keys map-side, "push" places blobs
     destination-AZ-local, "merge" runs the two-round compactor.
+
+    ``obs`` enables the observability layer (None | True | ObsConfig |
+    Observability — see ``repro.obs``); read it back as ``engine.obs``.
     """
     bcfg = BlobShuffleConfig(
         batch_bytes=max(int(cfg.batch_bytes * scale), 64 * 1024),
@@ -128,7 +131,7 @@ def simulate_async(cfg: SimConfig, *, engine_cfg: Optional[EngineConfig]
         bcfg, engine_cfg or EngineConfig(
             commit_interval_s=cfg.commit_interval_s),
         n_instances=cfg.n_inst, store=store, seed=cfg.seed,
-        exactly_once=exactly_once, strategy=strategy)
+        exactly_once=exactly_once, strategy=strategy, obs=obs)
     drive(eng, wl, batch_records=ingest_batch_records)
     metrics = eng.run()
     return eng, metrics.summary(store)
@@ -148,7 +151,7 @@ def simulate_elastic(cfg: SimConfig, *,
                      exactly_once: bool = True,
                      store: Optional[BlobStore] = None,
                      max_sim_s: float = 10.0,
-                     strategy=None
+                     strategy=None, obs=None
                      ) -> "tuple[AsyncShuffleEngine, object, dict]":
     """Elastic scenario through the cluster subsystem: phased offered
     load (default steady → ``spike_factor``× spike → steady, driving the
@@ -180,7 +183,7 @@ def simulate_elastic(cfg: SimConfig, *,
         bcfg, engine_cfg or EngineConfig(
             commit_interval_s=min(cfg.commit_interval_s, 1.0)),
         n_instances=cfg.n_inst, store=store, seed=cfg.seed,
-        exactly_once=exactly_once, strategy=strategy)
+        exactly_once=exactly_once, strategy=strategy, obs=obs)
     cluster = ElasticCluster(
         eng, mode=mode, heartbeat_timeout_s=heartbeat_timeout_s,
         autoscale=(policy or AutoscalePolicy()) if autoscale else None)

@@ -93,19 +93,28 @@ class SimulatedS3:
         return self.objects[blob_id].data
 
     # -- lifecycle ----------------------------------------------------------
+    def _accrue_object(self, o: StoredObject, now: float) -> None:
+        """Fold ``o``'s storage into ``byte_seconds`` up to ``now``,
+        capped at the object's expiry: an object stops billing at
+        ``put_at + retention_s`` no matter when a sweep or the end-of-run
+        accrual actually observes it, so the byte·seconds integral is
+        invariant to sweep cadence and cannot double-bill the window
+        between expiry and deletion."""
+        end = min(now, o.put_at + self.retention_s)
+        if end > o.accrued_to:
+            self.stats.byte_seconds += len(o.data) * (end - o.accrued_to)
+            o.accrued_to = end
+
     def run_retention(self, now: float) -> int:
         dead = [k for k, o in self.objects.items()
                 if now - o.put_at > self.retention_s]
         for k in dead:
-            o = self.objects.pop(k)
-            self.stats.byte_seconds += len(o.data) * (now - o.accrued_to)
+            self._accrue_object(self.objects.pop(k), now)
         return len(dead)
 
     def accrue_storage(self, now: float) -> None:
         for o in self.objects.values():
-            if now > o.accrued_to:
-                self.stats.byte_seconds += len(o.data) * (now - o.accrued_to)
-                o.accrued_to = now
+            self._accrue_object(o, now)
 
     def contains(self, blob_id: str) -> bool:
         return blob_id in self.objects

@@ -68,10 +68,13 @@ class StrategyStats:
     # two-round merge
     merge_rounds: int = 0
     merged_blobs: int = 0            # merged blobs published
+    merged_blob_bytes: int = 0       # bytes the compactor PUT (conservation)
     merged_inputs: int = 0           # small blobs coalesced into them
     merge_cache_hits: int = 0        # compactor reads served zonally
     merge_store_gets: int = 0        # compactor reads that hit the store
     merge_fallback_notes: int = 0    # originals delivered after a failure
+    merge_singles: int = 0           # lone notes passed through unmerged
+    notes_intercepted: int = 0       # notifications parked by on_publish
 
 
 class ShuffleStrategy:
@@ -361,6 +364,7 @@ class TwoRoundMergeStrategy(PushStrategy):
 
     # -- interception ------------------------------------------------------
     def on_publish(self, note, inst):
+        self.stats.notes_intercepted += 1
         buf = self._pending.setdefault(note.partition, [])
         buf.append(note)
         if len(buf) >= self.fan_in:
@@ -384,6 +388,7 @@ class TwoRoundMergeStrategy(PushStrategy):
         notes = self._pending.pop(partition)
         self.stats.merge_rounds += 1
         if len(notes) == 1:
+            self.stats.merge_singles += 1
             self._deliver(notes)      # nothing to merge
             return
         r = _MergeRound(partition, notes)
@@ -429,7 +434,7 @@ class TwoRoundMergeStrategy(PushStrategy):
             self._fail_round(r)       # expired: merging cannot help
             return
         self.stats.merge_store_gets += 1
-        eng.metrics.get_latencies.append(lat)
+        eng._note_get_latency(lat)
         eng.loop.after(lat, self._small_got, r, idx)
 
     def _small_got(self, r: _MergeRound, idx: int) -> None:
@@ -469,6 +474,10 @@ class TwoRoundMergeStrategy(PushStrategy):
         bid = f"merge-p{r.partition}-{self._seq:06d}"
         blob, notes = build_blob_from_buffers(
             {r.partition: chunks}, target_az=r.az, blob_id=bid, fmt=fmt)
+        if eng.obs is not None:
+            # the merged blob's lifecycle restarts here: batch_wait for
+            # its records absorbs the smalls' whole first-round journey
+            eng.obs.on_blob_handed_off(blob, r.az, None, eng.loop.now)
         self._put_merged(r, blob, notes[0], 0)
 
     def _put_merged(self, r: _MergeRound, blob: Blob,
@@ -494,6 +503,10 @@ class TwoRoundMergeStrategy(PushStrategy):
         eng.store.finish_put(blob.blob_id, blob.payload, eng.loop.now,
                              az=r.az)
         eng.metrics.put_latencies.append(lat)
+        self.stats.merged_blob_bytes += blob.size
+        if eng.obs is not None:
+            eng.obs.on_blob_durable(blob.blob_id, blob.size, r.az, lat,
+                                    eng.loop.now)
         if eng.cfg.cache_on_write:
             eng.loop.after(eng.ecfg.cache_fill_latency_s,
                            eng.caches[r.az].fill, blob.blob_id,
@@ -527,6 +540,8 @@ class TwoRoundMergeStrategy(PushStrategy):
         eng = self.engine
         for note in notes:
             eng.published.append(note)
+            if eng.obs is not None:
+                eng.obs.on_note_published(note, eng.loop.now)
             if eng.cluster is not None:
                 eng.cluster.publish(note, src_az)
             else:

@@ -1,0 +1,250 @@
+"""Observability layer (repro.obs): enabled-run bit-identity with the
+unobserved engine, exact stage decomposition, conservation laws on
+clean / faulty / rebalancing runs for every strategy, sketch-backed
+hedge thresholds with the exact cross-check, windowed queries, and the
+Chrome-trace artifact."""
+
+import dataclasses
+import hashlib
+import json
+
+import pytest
+
+import benchmarks.strategies as S
+from repro.cluster import ElasticCluster
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig, EngineConfig,
+                        ExpressOneZoneStore, FaultyStore, SimConfig,
+                        WorkloadConfig, simulate_async)
+from repro.core.workload import drive
+from repro.obs import (STAGES, ConservationError, ObsConfig, Observability,
+                       check_conservation, make_observability)
+
+STRATEGY_NAMES = ("default", "combining", "push", "merge")
+
+QCFG = dataclasses.replace(S.CFG, duration_s=1.5)
+
+
+def _digest(eng):
+    """The bit-identity digest from test_strategies: delivery multiset,
+    latency samples, store request counts, makespan."""
+    h = hashlib.sha256()
+    for p in sorted(eng.out):
+        h.update(str(p).encode())
+        for r in sorted((bytes(r.key), bytes(r.value), r.timestamp_us)
+                        for r in eng.out[p]):
+            h.update(r[0])
+            h.update(r[1])
+            h.update(str(r[2]).encode())
+    h.update(repr([round(x, 12)
+                   for x in eng.metrics.record_latencies[:50]]).encode())
+    h.update(repr((eng.store.stats.puts, eng.store.stats.gets,
+                   eng.store.stats.put_bytes)).encode())
+    h.update(repr(round(eng.metrics.makespan_s, 9)).encode())
+    return h.hexdigest()
+
+
+def _obs_run(strategy="default", obs=True, store=None, engine_cfg=None):
+    return simulate_async(QCFG, scale=S.SCALE, exactly_once=True,
+                          key_skew=S.KEY_SKEW,
+                          ingest_batch_records=S.BATCH_RECORDS,
+                          store=store or ExpressOneZoneStore(
+                              seed=QCFG.seed, num_az=QCFG.n_az),
+                          strategy=strategy, obs=obs,
+                          engine_cfg=engine_cfg)
+
+
+# -- bit-identity ------------------------------------------------------------
+
+@pytest.mark.parametrize("name", STRATEGY_NAMES)
+def test_observed_run_is_bit_identical_to_unobserved(name):
+    """The acceptance pin of the whole layer: enabling observability
+    never schedules an event or consumes RNG, so the observed run's
+    digest equals the unobserved run's for every strategy."""
+    eng_off, _ = _obs_run(name, obs=None)
+    eng_on, _ = _obs_run(name, obs=True)
+    assert eng_off.obs is None
+    assert eng_on.obs is not None
+    assert _digest(eng_on) == _digest(eng_off)
+
+
+def test_make_observability_resolves_and_rejects():
+    assert make_observability(None) is None
+    assert make_observability(False) is None
+    assert isinstance(make_observability(True), Observability)
+    cfg = ObsConfig(window_s=0.5)
+    o = make_observability(cfg)
+    assert o.cfg is cfg
+    assert make_observability(o) is o
+    with pytest.raises(TypeError, match="obs must be"):
+        make_observability(42)
+
+
+# -- latency decomposition ---------------------------------------------------
+
+@pytest.mark.parametrize("name", STRATEGY_NAMES)
+def test_stage_decomposition_reconciles_with_end_to_end(name):
+    """batch_wait + upload + commit_wait + notify + fetch is an EXACT
+    partition of the end-to-end latency: per-record stage sums equal the
+    e2e samples, so the mean sums agree to float precision and no record
+    is left unattributed."""
+    eng, _ = _obs_run(name)
+    d = eng.obs.stage_decomposition(qs=(50, 95))
+    chk = d["sum_check"]
+    assert chk["unattributed_records"] == 0
+    assert chk["stage_records"] == chk["e2e_records"] \
+        == eng.metrics.records_delivered
+    assert chk["e2e_mean_s"] > 0
+    assert chk["stage_mean_sum_s"] == pytest.approx(chk["e2e_mean_s"],
+                                                    rel=1e-9)
+    for s in STAGES:
+        assert 0.0 <= d[s]["p50_s"] <= d[s]["p95_s"]
+    assert d["e2e"]["p50_s"] <= d["e2e"]["p95_s"]
+    # the sketch's p95 tracks the exact per-record p95 within its bound
+    import numpy as np
+    exact = float(np.percentile(eng.metrics.record_latencies, 95))
+    assert d["e2e"]["p95_s"] == pytest.approx(exact, rel=0.02)
+
+
+# -- conservation laws -------------------------------------------------------
+
+@pytest.mark.parametrize("name", STRATEGY_NAMES)
+def test_conservation_holds_on_a_clean_run(name):
+    eng, _ = _obs_run(name)
+    rep = eng.obs.report
+    assert rep is not None and rep.checked >= 10
+    assert rep.violations == [], rep.summary()
+
+
+@pytest.mark.parametrize("name", STRATEGY_NAMES)
+def test_conservation_holds_under_throttling_and_transients(name):
+    """The checker must hold (not just skip everything) when the store
+    throttles and faults: retries, fallbacks and hedges all stay inside
+    the flow identities."""
+    store = FaultyStore(ExpressOneZoneStore(seed=QCFG.seed, num_az=QCFG.n_az),
+                       seed=5, throttle_rate=5.0, throttle_burst=3,
+                       prefix_len=2, transient_p=0.15)
+    eng, _ = _obs_run(name, store=store,
+                      engine_cfg=EngineConfig(
+                          commit_interval_s=QCFG.commit_interval_s,
+                          max_attempts=16))
+    assert store.faults.total > 0
+    rep = eng.obs.report
+    assert rep.violations == [], rep.summary()
+
+
+RCFG = BlobShuffleConfig(batch_bytes=48 * 1024, max_interval_s=0.2,
+                         num_partitions=18, num_az=3)
+RWL = WorkloadConfig(arrival_rate=2000.0, duration_s=1.5, record_bytes=300,
+                     key_skew=1.2, seed=11)
+
+
+def _rebalance_run(strategy, obs=True):
+    eng = AsyncShuffleEngine(RCFG, EngineConfig(commit_interval_s=0.1),
+                             n_instances=4, seed=7, exactly_once=True,
+                             strategy=strategy, obs=obs)
+    cluster = ElasticCluster(eng, mode="cooperative",
+                             heartbeat_timeout_s=0.15)
+    eng.loop.at(0.4, cluster.add_worker)
+    drive(eng, RWL, batch_records=64)
+    return eng, cluster, eng.run()
+
+
+@pytest.mark.parametrize("name", STRATEGY_NAMES)
+def test_conservation_holds_across_a_cooperative_rebalance(name):
+    """A worker joining mid-stream must leave every law intact, and the
+    rebalance window must be queryable from the recorded marks."""
+    eng, _, m = _rebalance_run(name)
+    rep = eng.obs.report
+    assert rep.violations == [], rep.summary()
+    triggers = eng.obs.registry.marks_named("rebalance_trigger:")
+    completes = eng.obs.registry.marks_named("rebalance_complete")
+    assert len(triggers) == 1 and len(completes) >= 1
+    t0, t1 = triggers[0][0], completes[-1][0]
+    assert t0 <= t1      # cooperative handoff can complete in the same tick
+    # "p95 during the rebalance" is a query, not bespoke code
+    p95_rebal = eng.obs.e2e_percentile(95, t0, t1 + 0.25)
+    p95_all = eng.obs.e2e_percentile(95)
+    assert p95_all is not None and p95_all > 0
+    assert p95_rebal is None or p95_rebal > 0
+
+
+def test_strict_conservation_raises_on_a_cooked_counter():
+    """Corrupting one stats counter after the run must flip exactly the
+    laws that reference it — and strict mode must raise."""
+    eng, _ = _obs_run("default")
+    eng.metrics.records_delivered += 1
+    rep = check_conservation(eng)
+    assert any(r.name == "delivered_records_match_debatchers"
+               for r in rep.violations)
+    with pytest.raises(ConservationError,
+                       match="delivered_records_match_debatchers"):
+        check_conservation(eng, strict=True)
+
+
+# -- sketch-backed hedging ---------------------------------------------------
+
+def test_hedge_threshold_from_sketch_passes_the_exact_cross_check():
+    """``hedge_debug_exact`` recomputes every threshold with
+    np.percentile and asserts the sketch stays within 2%: the run
+    completing IS the property holding on real latency data."""
+    cfg = BlobShuffleConfig(batch_bytes=32 * 1024, max_interval_s=0.1,
+                            num_partitions=9, num_az=3,
+                            cache_on_write=False)   # force store GETs
+    eng = AsyncShuffleEngine(
+        cfg, EngineConfig(commit_interval_s=0.05, hedge_quantile=50.0,
+                          hedge_min_samples=5, hedge_debug_exact=True),
+        n_instances=4, seed=1, exactly_once=True, obs=True)
+    wl = WorkloadConfig(arrival_rate=2500.0, duration_s=0.6,
+                        record_bytes=300, key_skew=0.8, seed=3)
+    drive(eng, wl, batch_records=64)
+    m = eng.run()
+    assert m.hedges_issued > 0          # thresholds really computed
+    assert eng.obs.report.violations == []
+
+
+# -- registry / windows ------------------------------------------------------
+
+def test_counter_and_histogram_window_slicing():
+    from repro.obs.registry import MetricsRegistry
+    reg = MetricsRegistry(window_s=0.25)
+    c = reg.counter("records", "engine", az=0)
+    h = reg.histogram("lat", "store")
+    for i in range(40):
+        t = i * 0.05                     # windows of 5 observations
+        c.inc(2, t)
+        h.observe(0.010 if t < 1.0 else 0.100, t)
+    assert c.total == 80
+    assert c.total_in(0.0, 1.0) == 40
+    assert c.total_in(1.0, 2.0) == 40
+    # the same histogram answers differently per window
+    assert h.percentile(50, 0.0, 1.0) == pytest.approx(0.010, rel=0.02)
+    assert h.percentile(50, 1.0, 2.0) == pytest.approx(0.100, rel=0.02)
+    assert h.percentile(50, 5.0, 6.0) is None      # empty slice
+    snap = reg.snapshot()
+    assert snap["counters"]["engine.records[az=0]"]["total"] == 80
+    assert snap["histograms"]["store.lat"]["count"] == 40
+
+
+# -- trace artifact ----------------------------------------------------------
+
+def test_trace_artifact_is_valid_chrome_trace(tmp_path):
+    eng, _ = _obs_run("default", obs=ObsConfig(trace_sample_every=2))
+    path = tmp_path / "trace.json"
+    eng.obs.tracer.dump(str(path))
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert evs and {e["ph"] for e in evs} <= {"X", "i", "M"}
+    spans = [e for e in evs if e["ph"] == "X"]
+    assert {"pack", "upload", "notify", "fetch"} <= {e["name"] for e in spans}
+    for e in spans:
+        assert e["ts"] >= 0 and e["dur"] >= 0
+    # every lane is named after its blob via thread_name metadata
+    lanes = {e["tid"] for e in spans}
+    named = {e["tid"] for e in evs
+             if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert lanes <= named
+    # sampling is deterministic on the blob id, never engine RNG
+    tracer = eng.obs.tracer
+    sampled = {e["args"]["name"] for e in evs
+               if e["ph"] == "M" and e["name"] == "thread_name"}
+    assert all(tracer.sampled(b) for b in sampled)

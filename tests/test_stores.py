@@ -71,9 +71,38 @@ def test_accrue_storage_is_idempotent_and_retention_does_not_double_count():
     assert s.stats.byte_seconds == pytest.approx(100 * 10.0)
     s.accrue_storage(10.0)                         # same instant: no-op
     assert s.stats.byte_seconds == pytest.approx(100 * 10.0)
-    s.run_retention(100.0)                         # deletes; adds the rest
+    s.run_retention(100.0)   # deletes; bills only up to expiry (t=50)
     assert not s.contains("obj")
-    assert s.stats.byte_seconds == pytest.approx(100 * 100.0)
+    assert s.stats.byte_seconds == pytest.approx(100 * 50.0)
+    s.accrue_storage(200.0)                        # object gone: no-op
+    assert s.stats.byte_seconds == pytest.approx(100 * 50.0)
+
+
+def test_byte_seconds_invariant_to_sweep_cadence():
+    """The storage bill is a property of the object's lifetime
+    (put → expiry), not of when sweeps happen to run: frequent sweeps, a
+    single late sweep, and no sweep at all (only the end-of-run accrual)
+    must all charge the same byte·seconds."""
+    def bill(sweep_times, final_accrue=300.0):
+        s = SimulatedS3(retention_s=50.0)
+        s.put("a", b"x" * 100, now=0.0)
+        s.put("b", b"y" * 300, now=20.0)
+        for t in sweep_times:
+            s.run_retention(t)
+        s.accrue_storage(final_accrue)
+        return s.stats.byte_seconds
+
+    expected = 100 * 50.0 + 300 * 50.0   # each object bills one lifetime
+    assert bill([]) == pytest.approx(expected)
+    assert bill([60.0, 80.0, 120.0]) == pytest.approx(expected)
+    assert bill([299.0]) == pytest.approx(expected)
+    # accruals BEFORE expiry don't change the total either
+    s = SimulatedS3(retention_s=50.0)
+    s.put("a", b"x" * 100, now=0.0)
+    for t in (10.0, 30.0, 49.0, 200.0):
+        s.accrue_storage(t)
+    s.run_retention(250.0)
+    assert s.stats.byte_seconds == pytest.approx(100 * 50.0)
 
 
 def test_engine_accrues_live_objects_at_end_of_run():
