@@ -106,6 +106,42 @@ def _diff_counts(static_ms, elastic_ms):
     return lost, dup
 
 
+#: written into the JSON under "_doc" (see docs/benchmarks.md)
+FIELD_DOCS = {
+    "records": "records submitted per run",
+    "payload_bit_identical": "GATE: cooperative-rebalance delivery multiset "
+                             "== static baseline's",
+    "records_lost": "GATE(=0): records the elastic run failed to deliver",
+    "records_duplicated": "GATE(=0): extra deliveries vs the static run",
+    "duplicates_delivered": "GATE(=0): duplicates the engine itself saw",
+    "records_replayed": "records replayed by commit-protocol recovery",
+    "p95_steady_s": "p95 record latency outside rebalance windows",
+    "p95_rebalance_s": "p95 record latency inside rebalance windows",
+    "p95_ratio": "GATE(<=3x): rebalance p95 / steady p95",
+    "partitions_moved_join": "GATE(<= fair share): partitions moved when "
+                             "a worker joined (sticky assignment)",
+    "join_fair_share": "ceil(partitions / workers) after the join",
+    "partitions_moved_total": "partitions moved across all rebalances",
+    "replayed_entries": "notification-log entries replayed on handoff",
+    "handoff_duplicates_dropped": "deliveries suppressed by the handoff "
+                                  "dedup fence",
+    "cache_reroutes": "consumer cache reroutes after ownership moves",
+    "eager_records_lost": "records lost under eager (non-cooperative) "
+                          "rebalance — the contrast lane",
+    "eager_records_duplicated": "extra deliveries under eager rebalance",
+    "eager_undeliverable": "records eager rebalance orphaned entirely",
+    "eager_replayed_entries": "log entries replayed under eager rebalance",
+    "autoscale_decisions": "scale decisions: virtual time, action, worker "
+                           "count, rule that fired",
+    "autoscale_peak_workers": "max workers the autoscaler provisioned",
+    "autoscale_lag_final": "consumer lag (records) at end of the spike run",
+    "autoscale_duplicates": "duplicate deliveries during autoscale (=0)",
+    "cost_usd_static_infra": "infra cost if peak workers ran the whole run",
+    "cost_usd_elastic_infra": "infra cost actually billed by the autoscaler",
+    "cost_delta_usd": "savings of elastic vs peak-static provisioning",
+}
+
+
 def run() -> List[Row]:
     rows: List[Row] = []
     result = {}
@@ -186,6 +222,7 @@ def run() -> List[Row]:
                  f"$static={static_infra:.4f} $elastic={elastic_infra:.4f} "
                  f"saved={static_infra - elastic_infra:.4f}"))
 
+    result["_doc"] = {k: FIELD_DOCS[k] for k in result if k in FIELD_DOCS}
     with open("BENCH_elastic.json", "w") as f:
         json.dump(result, f, indent=2)
     return rows

@@ -49,6 +49,9 @@ SUITES = {
            "TRACE_obs.json)",
     "tpu": "TPU shuffle adaptation",
     "kernels": "Pallas kernel microbenchmarks",
+    "train_input": "shuffle-fed MoE train loop: input GB/s + overlap, "
+                   "resume-after-AZ-outage bit-identity, sharded "
+                   "input-spec dryrun (writes BENCH_train_input.json)",
     "dryrun": "roofline summary of results/dryrun",
 }
 
@@ -70,6 +73,11 @@ def main() -> None:
     args = ap.parse_args()
 
     rows = []
+    if args.suite in ("all", "train_input"):
+        # first: its XLA_FLAGS (8 host devices for the pod/data/model
+        # mesh) must be set before any other suite initializes jax
+        from benchmarks import train_input
+        rows += train_input.run(quick=args.quick)  # BENCH_train_input.json
     if args.suite in ("all", "micro"):
         from benchmarks import micro
         rows += micro.run(quick=args.quick)  # also writes BENCH_micro.json

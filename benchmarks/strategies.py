@@ -106,6 +106,30 @@ def _run_strategy(name: str, cfg: SimConfig, scale: float):
     return eng, store, summary
 
 
+#: written into the JSON under "_doc" (see docs/benchmarks.md)
+FIELD_DOCS = {
+    "quick": "true when the run used the --quick smoke geometry",
+    "key_skew": "Zipf exponent of the workload's key distribution",
+    "batch_records": "records per submitted RecordBatch",
+    "strategies": "per-strategy raw metrics: delivered/duplicate counts, "
+                  "shipped bytes, puts/gets (cross-AZ split), "
+                  "notifications, merge stats, cost, p50/p95 latency, "
+                  "makespan, plus ratios vs the default strategy",
+    "payload_bit_identical": "GATE: push and merge deliver the same "
+                             "multiset as the default strategy",
+    "combining_matches_reference": "GATE: map-side combining delivery == "
+                                   "reference combine of the same batches",
+    "combining_delivery_count_ok": "default delivered - records combined "
+                                   "== combining delivered",
+    "exactly_once_ok": "GATE: zero duplicate deliveries in every strategy",
+    "combining_shipped_ratio": "GATE(<1): combining shipped bytes / "
+                               "default shipped bytes",
+    "push_cross_az_gets": "GATE(=0): cross-AZ GETs under push-based "
+                          "AZ-local placement",
+    "merge_get_ratio": "GATE(>=3x): default GETs / two-round-merge GETs",
+}
+
+
 def run(quick: bool = False) -> List[Row]:
     cfg, scale = _sim_args(quick)
     rows: List[Row] = []
@@ -181,6 +205,7 @@ def run(quick: bool = False) -> List[Row]:
         "push_cross_az_gets": results["push"]["cross_az_gets"],
         "merge_get_ratio": results["merge"]["get_ratio_vs_default"],
     }
+    out["_doc"] = {k: FIELD_DOCS[k] for k in out if k in FIELD_DOCS}
     with open("BENCH_strategies.json", "w") as f:
         json.dump(out, f, indent=2, sort_keys=True)
         f.write("\n")

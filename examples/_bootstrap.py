@@ -1,0 +1,36 @@
+"""Shared bootstrap for the runnable examples.
+
+Every example needs the same two lines of environment setup, and both
+are order-sensitive, so they live here instead of being copy-pasted:
+
+* put ``<repo>/src`` on ``sys.path`` so ``import repro`` works when the
+  example is run straight from a checkout (``python examples/foo.py``)
+  without an editable install or ``PYTHONPATH``;
+* optionally pin ``XLA_FLAGS`` to fake N host devices — this MUST
+  happen before the first ``import jax`` anywhere in the process
+  (device count locks on first backend init), which is why examples
+  call ``setup()`` at the very top, before their jax-importing imports.
+
+Usage (first lines of an example)::
+
+    import _bootstrap
+    _bootstrap.setup()                  # path only
+    _bootstrap.setup(fake_devices=8)    # path + 8 simulated devices
+"""
+
+import os
+import sys
+
+
+def setup(fake_devices: int = 0) -> None:
+    if fake_devices:
+        assert "jax" not in sys.modules, \
+            "setup(fake_devices=...) must run before the first jax import"
+        os.environ.setdefault(
+            "XLA_FLAGS",
+            f"--xla_force_host_platform_device_count={fake_devices}")
+    src = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                       os.pardir, "src")
+    src = os.path.normpath(src)
+    if src not in sys.path:
+        sys.path.insert(0, src)

@@ -1,7 +1,7 @@
 """Async BlobShuffle engine demo: one command that reproduces the paper's
 latency/cost tradeoff on the event-driven simulator.
 
-    PYTHONPATH=src python examples/async_shuffle_demo.py
+    python examples/async_shuffle_demo.py
 
 Prints p50/p95/p99 shuffle latency and $/GiB for two batch-interval
 settings. Longer batching always means fewer requests -> cheaper per
@@ -13,13 +13,12 @@ synchronous single-in-flight execution of the same engine on a fixed
 workload.
 """
 
-import os
-import sys
+import _bootstrap
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_bootstrap.setup()
 
-from repro.core import (AsyncShuffleEngine, BlobShuffleConfig, EngineConfig,
-                        WorkloadConfig, drive)
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,  # noqa: E402
+                        EngineConfig, WorkloadConfig, drive)
 
 
 def run_once(batch_interval_s, upload_par, fetch_par, seed=1):

@@ -13,10 +13,14 @@ Runs three scripted scenarios on the virtual clock:
 Usage:  python examples/elastic_shuffle_demo.py
 """
 
-import numpy as np
+import _bootstrap
 
-from repro.cluster import ElasticCluster
-from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,
+_bootstrap.setup()
+
+import numpy as np  # noqa: E402
+
+from repro.cluster import ElasticCluster  # noqa: E402
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,  # noqa: E402
                         EngineConfig, Record, SimConfig, simulate_elastic)
 
 CFG = BlobShuffleConfig(batch_bytes=48 * 1024, max_interval_s=0.2,

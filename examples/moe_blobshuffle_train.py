@@ -1,47 +1,85 @@
-"""MoE training with the BlobShuffle expert dispatch on a multi-pod mesh.
+"""MoE training fed BY the BlobShuffle engine — the two halves of the
+repo as one system.
 
-Runs a reduced DeepSeek-V2-style MoE on 8 simulated devices
-(2 pods x 2 data x 2 model) with the hierarchical blob shuffle and
-blob-bucketed int8 cross-pod gradient sync — the full paper technique,
-end to end, with loss decreasing.
+The paper's shuffle is the *input pipeline* here, not just the expert
+dispatch: step-keyed token records flow source -> Batcher -> blob ->
+zonal object store -> notification log -> Debatcher, and
+``repro.train_input.ShuffleFedInput`` reassembles the deliveries into
+sharded device batches, double-buffered ahead of a real jitted
+``make_train_step`` on an 8-device (pod=2, data=2, model=2) mesh. The
+MoE layer itself can additionally use the hierarchical blob shuffle for
+expert dispatch (``--mode blob``) and blob-bucketed int8 cross-pod
+gradient sync (``--grad-sync blob_int8``, current-jax only).
 
-    PYTHONPATH=src python examples/moe_blobshuffle_train.py --steps 30
+Model/optimizer state checkpoints through ``BlobCheckpointer`` over the
+same simulated object-store tiers, with the pipeline's committed
+per-partition offsets riding in the manifest — so ``--crash-at N``
+followed by ``--resume`` restores the last manifest, replays the
+engine's virtual clock past the committed prefix, and continues with a
+loss trajectory bit-identical to an uninterrupted run (the
+``benchmarks/train_input.py`` gates, interactively).
+
+    python examples/moe_blobshuffle_train.py --steps 12
+    python examples/moe_blobshuffle_train.py --steps 12 --crash-at 6
+    python examples/moe_blobshuffle_train.py --steps 12 --resume
+
+See docs/architecture.md for the full data-flow narrative.
 """
 
-import os
+import _bootstrap
 
-os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
+_bootstrap.setup(fake_devices=8)
 
 import argparse   # noqa: E402
-import sys        # noqa: E402
+import pickle     # noqa: E402
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
-
-import jax                      # noqa: E402
-
+from repro.checkpoint import BlobCheckpointer, TieredCheckpointStore  # noqa: E402
+from repro.cluster import ElasticCluster                  # noqa: E402
 from repro.configs import get_config                      # noqa: E402
-from repro.data import lm_batch_stream                    # noqa: E402
+from repro.core import (AsyncShuffleEngine, BlobShuffleConfig,  # noqa: E402
+                        EngineConfig)
+from repro.core.stores import ExpressOneZoneStore, SimulatedS3  # noqa: E402
 from repro.launch import make_test_mesh                   # noqa: E402
-from repro.models import init_params, lm                  # noqa: E402
 from repro.shuffle import ShuffleConfig                   # noqa: E402
-from repro.training import (OptConfig, TrainConfig, adamw_init,  # noqa: E402
-                            make_train_step)
+from repro.train_input import (TokenStreamConfig,         # noqa: E402
+                               train_shuffle_fed)
+from repro.training import OptConfig, TrainConfig         # noqa: E402
+
+# the simulated ckpt store lives in-process; persist it so --resume (a
+# fresh process) sees the manifests the crashed run committed. A real
+# deployment points TieredCheckpointStore at a durable bucket instead.
+_CKPT_FILE = "/tmp/moe_blobshuffle_ckpt.pkl"
+
+
+def make_engine():
+    """Fresh deterministic shuffle engine: zonal store, 3 instances,
+    exactly-once, with an AZ-1 outage mid-stream for flavor."""
+    eng = AsyncShuffleEngine(
+        BlobShuffleConfig(batch_bytes=4096, max_interval_s=0.02,
+                          num_partitions=9, num_az=3),
+        EngineConfig(commit_interval_s=0.15), n_instances=3,
+        store=ExpressOneZoneStore(seed=7, num_az=3), seed=5,
+        exactly_once=True)
+    ElasticCluster(eng, mode="cooperative").az_outage_at(0.3, 1)
+    return eng
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--steps", type=int, default=12)
     ap.add_argument("--mode", default="blob",
                     choices=["dense", "direct", "blob"])
-    ap.add_argument("--grad-sync", default="blob_int8",
+    ap.add_argument("--grad-sync", default="auto",
                     choices=["auto", "blob", "blob_int8"])
+    ap.add_argument("--crash-at", type=int, default=None,
+                    help="die mid-step N (then rerun with --resume)")
+    ap.add_argument("--resume", action="store_true",
+                    help="restore the last manifest and continue")
     args = ap.parse_args()
 
     mesh = make_test_mesh(devices=8)
     print(f"mesh: {dict(mesh.shape)}  devices: {mesh.devices.size}")
     cfg = get_config("deepseek-v2-lite-16b", smoke=True)
-    params = init_params(lm.param_defs(cfg), jax.random.key(0))
-    opt = adamw_init(params)
     shuf = ShuffleConfig(mode=args.mode,
                          token_axes=("pod", "data", "model"),
                          expert_axes=("pod", "model"),
@@ -50,20 +88,38 @@ def main():
                                      total_steps=args.steps),
                        shuffle=shuf, grad_sync=args.grad_sync,
                        grad_sync_blob_bytes=1 << 16)
-    step = jax.jit(make_train_step(cfg, tcfg, mesh=mesh))
-    batch_fn = lm_batch_stream(cfg.vocab_size, 8, 32)
+    stream = TokenStreamConfig(vocab_size=cfg.vocab_size, batch=8,
+                               seq_len=32, seed=0)
+    if args.resume:
+        with open(_CKPT_FILE, "rb") as f:
+            store = pickle.load(f)
+    else:
+        store = SimulatedS3(seed=404)
+    ckpt = BlobCheckpointer(TieredCheckpointStore(store),
+                            async_upload=False)
 
-    losses = []
-    for i in range(args.steps):
-        params, opt, metrics = step(params, opt, batch_fn(i))
-        losses.append(float(metrics["loss"]))
-        if i % 5 == 0 or i == args.steps - 1:
-            print(f"step {i:3d} loss {losses[-1]:.4f} "
-                  f"aux {float(metrics['aux_loss']):.5f} "
-                  f"gnorm {float(metrics['grad_norm']):.3f}")
-    assert sum(losses[-5:]) < sum(losses[:5]), "loss did not decrease"
-    print(f"OK mode={args.mode} grad_sync={args.grad_sync} "
-          f"loss {losses[0]:.3f} -> {losses[-1]:.3f}")
+    res = train_shuffle_fed(
+        cfg, tcfg, mesh, stream, steps=args.steps,
+        engine_factory=make_engine, ckpt=ckpt, ckpt_every=4,
+        resume=args.resume, crash_at_step=args.crash_at,
+        pipeline_kwargs={"step_interval_s": 0.05, "prefetch_steps": 2})
+
+    st = res.input_stats
+    for s, loss in zip(res.steps, res.losses):
+        if s % 4 == 0 or s == args.steps - 1:
+            print(f"step {s:3d} loss {loss:.4f}")
+    print(f"input: {st['records_delivered']} records delivered, "
+          f"{st['records_replayed']} replayed across the AZ outage, "
+          f"overlap {st['overlap_fraction']:.0%}")
+    if res.crashed:
+        with open(_CKPT_FILE, "wb") as f:
+            pickle.dump(store, f)
+        print(f"CRASHED mid-step {args.crash_at} — rerun with --resume")
+    elif res.losses:
+        assert res.losses[-1] < res.losses[0], "loss did not decrease"
+        print(f"OK mode={args.mode} grad_sync={args.grad_sync} "
+              f"start_step={res.start_step} "
+              f"loss {res.losses[0]:.3f} -> {res.losses[-1]:.3f}")
 
 
 if __name__ == "__main__":

@@ -4,18 +4,18 @@ Trains a ~small decoder LM for a few hundred steps with the full substrate:
 data pipeline -> train_step (AdamW, remat, bf16 compute) -> blob-store
 checkpoints w/ fault-tolerant restart. Verifies the loss decreases.
 
-    PYTHONPATH=src python examples/quickstart.py --steps 300
+    python examples/quickstart.py --steps 300
 """
 
-import argparse
-import os
-import sys
-import tempfile
-import time
+import _bootstrap
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_bootstrap.setup()
 
-import jax
+import argparse   # noqa: E402
+import tempfile   # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
 
 from repro.checkpoint import FileStore
 from repro.configs import get_config

@@ -1,17 +1,17 @@
 """Batched serving: prefill a batch of prompts, then decode with KV cache.
 
-    PYTHONPATH=src python examples/serve_batch.py --arch gemma-2b --tokens 32
+    python examples/serve_batch.py --arch gemma-2b --tokens 32
 """
 
-import argparse
-import os
-import sys
-import time
+import _bootstrap
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_bootstrap.setup()
 
-import jax
-import jax.numpy as jnp
+import argparse   # noqa: E402
+import time       # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
 
 from repro.configs import get_config
 from repro.models import init_params, lm

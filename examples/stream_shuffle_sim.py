@@ -2,18 +2,16 @@
 miniature — shuffle real records through Batcher→S3→Debatcher, then
 reproduce the headline numbers with the calibrated simulator.
 
-    PYTHONPATH=src python examples/stream_shuffle_sim.py
+    python examples/stream_shuffle_sim.py
 """
 
-import os
-import sys
+import _bootstrap
 
-sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+_bootstrap.setup()
 
-
-from repro.core import (BlobShuffleConfig, BlobShufflePipeline, SimConfig,
-                        simulate)
-from repro.data import shufflebench_records
+from repro.core import (BlobShuffleConfig, BlobShufflePipeline,  # noqa: E402
+                        SimConfig, simulate)
+from repro.data import shufflebench_records  # noqa: E402
 
 
 def main():

@@ -1,2 +1,6 @@
 from repro.checkpoint.blobstore_ckpt import (BlobCheckpointer, FileStore,
                                              latest_step)
+from repro.checkpoint.tiered import TieredCheckpointStore
+
+__all__ = ["BlobCheckpointer", "FileStore", "TieredCheckpointStore",
+           "latest_step"]

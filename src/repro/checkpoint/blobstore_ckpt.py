@@ -13,6 +13,17 @@ never a corrupt checkpoint. Restore trusts manifests only.
   **elastic restore**: arrays are stored whole, so restoring onto a
   different mesh/sharding (different DP/TP size) is a device_put with the
   new shardings.
+
+The checkpointer is store-agnostic: any object implementing the
+``CheckpointStore`` shape (``put``/``get``/``put_manifest``/
+``get_manifest``/``manifests``/``run_retention``) works — ``FileStore``
+here for real filesystems, ``repro.checkpoint.tiered.TieredCheckpointStore``
+to checkpoint through the simulated multi-tier blob stores
+(``SimulatedS3`` / ``ExpressOneZoneStore`` / ``FaultyStore``).
+
+Manifests can carry an ``extra`` dict (e.g. the training input pipeline's
+per-partition consumed offsets) so data-plane progress commits atomically
+with the model state it belongs to.
 """
 
 from __future__ import annotations
@@ -100,15 +111,20 @@ def _decode(data: bytes, shape, dtype_str: str) -> np.ndarray:
 
 
 class BlobCheckpointer:
-    def __init__(self, store: FileStore, *, async_upload: bool = True):
+    def __init__(self, store, *, async_upload: bool = True):
         self.store = store
         self.async_upload = async_upload
         self._thread: Optional[threading.Thread] = None
         self._error: Optional[BaseException] = None
 
     # -- write path ------------------------------------------------------
-    def save(self, step: int, tree: PyTree, *, crash_before_manifest=False):
+    def save(self, step: int, tree: PyTree, *, extra: Optional[dict] = None,
+             crash_before_manifest=False):
         """Upload all leaves as blobs, then commit the manifest.
+
+        ``extra`` rides in the manifest (JSON-serializable metadata that
+        must commit atomically with the checkpoint — e.g. input-pipeline
+        offsets); read it back with :meth:`manifest`.
 
         ``crash_before_manifest`` (tests): simulate a failure after the
         blob uploads but before the manifest write — the checkpoint must
@@ -129,7 +145,8 @@ class BlobCheckpointer:
             if crash_before_manifest:
                 return  # blobs become orphans; manifest never written
             manifest = {"step": step, "treedef": str(treedef),
-                        "leaves": entries, "time": time.time()}
+                        "leaves": entries, "time": time.time(),
+                        "extra": extra or {}}
             self.store.put_manifest(f"step{step:08d}.json", manifest)
 
         if self.async_upload:
@@ -153,6 +170,14 @@ class BlobCheckpointer:
             raise e
 
     # -- read path ---------------------------------------------------------
+    def manifest(self, step: int) -> Optional[dict]:
+        """The committed manifest for ``step`` (None if not committed).
+        ``manifest(step)["extra"]`` carries the metadata saved alongside."""
+        m = self.store.get_manifest(f"step{step:08d}.json")
+        if m is not None:
+            m.setdefault("extra", {})  # manifests from older writers
+        return m
+
     def restore(self, step: int, like: PyTree, *, shardings: PyTree = None
                 ) -> PyTree:
         """Restore into the structure of ``like``; optionally device_put
@@ -176,7 +201,7 @@ class BlobCheckpointer:
         return tree
 
 
-def latest_step(store: FileStore) -> Optional[int]:
+def latest_step(store) -> Optional[int]:
     names = store.manifests()
     if not names:
         return None

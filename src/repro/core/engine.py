@@ -251,6 +251,7 @@ class AsyncShuffleEngine:
         self._pending_ingests = 0
         self._rr = 0
         self._t_done = 0.0
+        self._started = False
         self.out: Dict[int, List[Record]] = defaultdict(list)
         self.published: List[Notification] = []
         self.metrics = ShuffleMetrics()
@@ -901,15 +902,27 @@ class AsyncShuffleEngine:
             self.submit(now + (k + 1) * 1e-6, rec)
 
     # -- driver ------------------------------------------------------------
-    def run(self, until: Optional[float] = None) -> ShuffleMetrics:
-        """Run the event loop to completion (all submitted records
-        delivered, all commits finished) and return the metrics."""
+    def start(self) -> None:
+        """Arm the periodic commit/retention timers without running the
+        loop. Idempotent. Callers that drive the clock incrementally
+        (``loop.run(until=...)`` — e.g. the training input pipeline in
+        ``repro.train_input``) need the commit cadence armed up front;
+        otherwise, under exactly-once, nothing becomes visible until the
+        sources fully drain."""
+        if self._started:
+            return
+        self._started = True
         ci = self.ecfg.commit_interval_s
         if ci:
             self.loop.after(ci, self._commit_tick, ci)
         rs = self.ecfg.retention_sweep_s
         if rs:
             self.loop.after(rs, self._retention_tick, rs)
+
+    def run(self, until: Optional[float] = None) -> ShuffleMetrics:
+        """Run the event loop to completion (all submitted records
+        delivered, all commits finished) and return the metrics."""
+        self.start()
         self.loop.run(until)
         if self.cluster is not None:
             self.cluster.finalize(self.loop.now)

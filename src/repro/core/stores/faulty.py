@@ -148,3 +148,9 @@ class FaultyStore:
 
     def contains(self, blob_id: str) -> bool:
         return self.inner.contains(blob_id)
+
+    def keys(self) -> list:
+        return self.inner.keys()
+
+    def delete(self, blob_id: str, now: float = 0.0) -> bool:
+        return self.inner.delete(blob_id, now)

@@ -119,6 +119,19 @@ class SimulatedS3:
     def contains(self, blob_id: str) -> bool:
         return blob_id in self.objects
 
+    def keys(self) -> list:
+        """Namespace listing (S3 LIST analogue) — snapshot of live keys."""
+        return list(self.objects)
+
+    def delete(self, blob_id: str, now: float = 0.0) -> bool:
+        """Explicit DELETE (beyond retention expiry): bills storage up to
+        ``now`` then drops the object. Returns False if absent."""
+        o = self.objects.pop(blob_id, None)
+        if o is None:
+            return False
+        self._accrue_object(o, now)
+        return True
+
     # -- latency sampling hooks (overridden by zonal subclasses) ------------
     def _sample_put(self, size: int, az: Optional[int]) -> float:
         return self.latency.sample_put(size, self.rng)

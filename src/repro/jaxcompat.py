@@ -1,0 +1,91 @@
+"""Version bridge for the jax sharding API.
+
+The model stack is written against the current jax surface
+(``jax.shard_map``, ``jax.sharding.AxisType``,
+``jax.sharding.get_abstract_mesh``); older installs (0.4.x) ship the
+same machinery under ``jax.experimental.shard_map`` with renamed
+knobs (``check_rep``/``auto`` instead of ``check_vma``/``axis_names``)
+and no ambient-mesh context at all. Every call site goes through this
+module so the difference lives in exactly one place:
+
+* ``shard_map`` — translates ``check_vma`` -> ``check_rep`` and
+  ``axis_names={manual}`` -> ``auto=frozenset(mesh) - manual`` on old
+  jax; passes through verbatim on new jax.
+* ``get_abstract_mesh`` — the ambient (context) mesh, or ``None`` when
+  the install has no such concept. Callers already treat ``None`` as
+  "no context": e.g. ``shuffle.api`` resolves an empty EP domain and
+  falls back to the dense MoE path inside pod-manual regions, which is
+  exactly the right degradation when nested partial-manual regions
+  are unavailable.
+* ``manual_axis_names`` — the Manual axes of a context mesh (empty set
+  when ``AxisType`` does not exist).
+* ``make_mesh`` — ``jax.make_mesh`` with explicit Auto axis types when
+  the install supports them.
+* ``cost_analysis`` — normalizes ``Compiled.cost_analysis()`` to one
+  flat dict (0.4.x returns a one-element list of dicts).
+"""
+
+from __future__ import annotations
+
+import jax
+
+#: True when this install has the current ``jax.shard_map`` API.
+NEW_SHARD_MAP = hasattr(jax, "shard_map")
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma=None,
+              axis_names=None):
+    if NEW_SHARD_MAP:
+        kw = {}
+        if check_vma is not None:
+            kw["check_vma"] = check_vma
+        if axis_names is not None:
+            kw["axis_names"] = set(axis_names)
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kw)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    # check_rep is a static verifier with known false positives around
+    # partial-auto regions on old jax; the new default is also lax, so
+    # only enable it when the caller asked for the check explicitly.
+    kw = {"check_rep": bool(check_vma)}
+    if axis_names is not None:
+        kw["auto"] = frozenset(mesh.axis_names) - set(axis_names)
+    return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                      out_specs=out_specs, **kw)
+
+
+def get_abstract_mesh():
+    """Ambient mesh of the enclosing shard_map region, else ``None``."""
+    fn = getattr(jax.sharding, "get_abstract_mesh", None)
+    if fn is None:
+        return None
+    mesh = fn()
+    # new jax returns an empty AbstractMesh outside any region
+    if mesh is None or not getattr(mesh, "axis_names", ()):
+        return None
+    return mesh
+
+
+def manual_axis_names(mesh) -> set:
+    """Names of the mesh axes that are Manual (shard_map'd) in ``mesh``."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if mesh is None or axis_type is None:
+        return set()
+    return {n for n, t in zip(mesh.axis_names, mesh.axis_types)
+            if t == axis_type.Manual}
+
+
+def cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a flat dict on every jax version."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca or {}
+
+
+def make_mesh(shape, axes):
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes,
+                         axis_types=(axis_type.Auto,) * len(axes))

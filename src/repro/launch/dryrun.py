@@ -17,6 +17,7 @@ import jax           # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 from jax.sharding import NamedSharding, PartitionSpec as P  # noqa: E402
 
+from repro import jaxcompat  # noqa: E402
 from repro.configs import all_cells, all_skips, get_config, get_shape  # noqa: E402
 from repro.distributed.sharding import (DEFAULT_RULES, named_shardings,  # noqa: E402
                                         partition_spec)
@@ -94,11 +95,10 @@ def cell_rules(cfg: ModelConfig, shape: ShapeConfig, mesh):
 def _strip_ambient_manual(pspec):
     """Drop mesh axes that are Manual in the ambient mesh (inside a
     pod-manual shard_map the constraint must not mention "pod")."""
-    ctx = jax.sharding.get_abstract_mesh()
+    ctx = jaxcompat.get_abstract_mesh()
     if ctx is None:
         return pspec
-    manual = {n for n, t in zip(ctx.axis_names, ctx.axis_types)
-              if t == jax.sharding.AxisType.Manual}
+    manual = jaxcompat.manual_axis_names(ctx)
     if not manual:
         return pspec
 
@@ -289,7 +289,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
     t_compile = time.time() - t0
 
     ma = compiled.memory_analysis()
-    ca = compiled.cost_analysis() or {}
+    ca = jaxcompat.cost_analysis(compiled)
     stats = hlo_analysis.analyze(compiled.as_text(), num_devices=n_dev,
                                  devices_per_pod=dpp)
 

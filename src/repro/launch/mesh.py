@@ -9,12 +9,11 @@ scales to 1000+ nodes — nothing in the framework assumes pod == 2).
 
 from __future__ import annotations
 
-import jax
+from repro import jaxcompat
 
 
 def _mesh(shape, axes):
-    auto = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=auto)
+    return jaxcompat.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):

@@ -18,6 +18,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro import jaxcompat
 from repro.shuffle import dispatch as D
 
 # Public kernel surface, resolved lazily (PEP 562): the kernel packages
@@ -74,14 +75,14 @@ class ShuffleConfig:
 def _mesh_axis_names(mesh):
     if mesh is not None:
         return mesh.axis_names
-    ctx = jax.sharding.get_abstract_mesh()
+    ctx = jaxcompat.get_abstract_mesh()
     return ctx.axis_names if ctx is not None else ()
 
 
 def mesh_axis_size(mesh, name) -> int:
     if mesh is not None:
         return mesh.shape[name]
-    return dict(jax.sharding.get_abstract_mesh().shape)[name]
+    return dict(jaxcompat.get_abstract_mesh().shape)[name]
 
 
 def _expert_ffn(we_gate, we_up, we_down, compute_dtype):
@@ -242,11 +243,10 @@ def ep_moe_ffn(x, w_router, we_gate, we_up, we_down, *, top_k: int,
     if cfg.use_context_mesh:
         # nested inside a pod-manual region: use the ambient mesh and make
         # manual only the axes that are not already manual in the context.
-        ctx = jax.sharding.get_abstract_mesh()
-        manual = {n for n, t in zip(ctx.axis_names, ctx.axis_types)
-                  if t == jax.sharding.AxisType.Manual}
-        kwargs["axis_names"] = set(ctx.axis_names) - manual
-    y, aux, dropped, load, dcn = jax.shard_map(
+        ctx = jaxcompat.get_abstract_mesh()
+        kwargs["axis_names"] = (set(ctx.axis_names)
+                                - jaxcompat.manual_axis_names(ctx))
+    y, aux, dropped, load, dcn = jaxcompat.shard_map(
         local_fn, mesh=mesh,
         in_specs=(P(cfg.token_axes, None), tok_spec, P(None, None),
                   P(cfg.expert_axes, None, None),

@@ -1,0 +1,113 @@
+"""Dryrun lane: validate the shuffle-fed batch against the sharded specs.
+
+Three layers, cheapest first (mirroring ``launch/dryrun.py``'s
+lower-and-inspect harness, scoped to the input pipeline):
+
+* ``input_spec_report`` — from ``launch.specs.input_specs`` +
+  ``distributed.sharding`` rules alone: each input's global shape,
+  dtype, PartitionSpec, and per-device shard shape (with the
+  divisibility proof that the spec actually tiles the mesh);
+* ``validate_device_batch`` — a batch the pipeline actually produced:
+  every array must match the spec's shape/dtype and carry a sharding
+  equivalent to the rules' NamedSharding, shard-shape checked against
+  the report;
+* ``lower_train_step`` — trace/lower the real ``make_train_step`` with
+  the sharded batch abstracts (no compile, no devices touched beyond
+  metadata): proves the specs are consumable by the actual step.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+from repro.distributed.sharding import (DEFAULT_RULES, batch_specs,
+                                        partition_spec)
+from repro.launch.specs import input_specs
+from repro.models.common import ShapeConfig
+
+
+def _shard_shape(global_shape, pspec, mesh):
+    """Per-device shard shape under ``pspec`` (raises on non-divisible —
+    ``partition_spec`` should never emit such a spec)."""
+    out = []
+    for dim, part in zip(global_shape, tuple(pspec) + (None,) * (
+            len(global_shape) - len(tuple(pspec)))):
+        axes = (part,) if isinstance(part, str) else (part or ())
+        n = 1
+        for ax in axes:
+            n *= mesh.shape[ax]
+        if dim % n:
+            raise ValueError(f"dim {dim} not divisible by mesh product {n} "
+                             f"for spec {pspec}")
+        out.append(dim // n)
+    return tuple(out)
+
+
+def input_spec_report(model_cfg, shape: ShapeConfig, mesh,
+                      rules=None) -> Dict[str, dict]:
+    rules = rules or DEFAULT_RULES
+    report = {}
+    for name, spec in input_specs(model_cfg, shape).items():
+        ps = partition_spec(spec, rules, mesh)
+        report[name] = {
+            "global_shape": list(spec.shape),
+            "dtype": str(spec.dtype.__name__ if hasattr(spec.dtype, "__name__")
+                         else spec.dtype),
+            "partition_spec": str(ps),
+            "per_device_shape": list(_shard_shape(spec.shape, ps, mesh)),
+        }
+    return report
+
+
+def validate_device_batch(batch, model_cfg, shape: ShapeConfig, mesh,
+                          rules=None) -> Dict[str, dict]:
+    """Assert a produced device batch matches the sharded input specs;
+    returns the report on success, raises AssertionError on any drift."""
+    import jax.numpy as jnp
+
+    rules = rules or DEFAULT_RULES
+    specs = input_specs(model_cfg, shape)
+    shardings = batch_specs(specs, rules, mesh)
+    report = input_spec_report(model_cfg, shape, mesh, rules)
+    assert set(batch) == set(specs), \
+        f"batch keys {sorted(batch)} != spec keys {sorted(specs)}"
+    for name, arr in batch.items():
+        spec = specs[name]
+        assert tuple(arr.shape) == tuple(spec.shape), \
+            f"{name}: shape {arr.shape} != spec {spec.shape}"
+        assert arr.dtype == jnp.dtype(spec.dtype), \
+            f"{name}: dtype {arr.dtype} != spec {spec.dtype}"
+        want = shardings[name]
+        assert arr.sharding.is_equivalent_to(want, arr.ndim), \
+            f"{name}: sharding {arr.sharding} != {want}"
+        got_shard = tuple(arr.addressable_shards[0].data.shape)
+        assert got_shard == tuple(report[name]["per_device_shape"]), \
+            f"{name}: shard shape {got_shard} != " \
+            f"{report[name]['per_device_shape']}"
+    return report
+
+
+def lower_train_step(model_cfg, tcfg, mesh, shape: ShapeConfig,
+                     rules=None) -> Optional[str]:
+    """Lower (trace, don't compile) the real train step against the
+    sharded input abstracts; returns the lowered StableHLO head or
+    raises if the specs don't feed the step."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.models import lm
+    from repro.models.common import abstract_params
+    from repro.training.optimizer import adamw_init
+    from repro.training.train_step import make_train_step
+
+    rules = rules or DEFAULT_RULES
+    params_abs = abstract_params(lm.param_defs(model_cfg))
+    opt_abs = jax.eval_shape(adamw_init, params_abs)
+    specs = input_specs(model_cfg, shape)
+    shardings = batch_specs(specs, rules, mesh)
+    batch_abs = {k: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype),
+                                         sharding=shardings[k])
+                 for k, s in specs.items()}
+    step = make_train_step(model_cfg, tcfg, mesh=mesh)
+    lowered = jax.jit(step).lower(params_abs, opt_abs, batch_abs)
+    return lowered.as_text()[:400]

@@ -1,0 +1,121 @@
+"""Crash-mid-checkpoint semantics of the blob checkpointer.
+
+The commit protocol (blobs first, manifest last) must guarantee:
+
+* a crash between blob upload and manifest write leaves **orphans** —
+  unreachable from any restore path and collected by retention;
+* restore trusts **manifests only** (stray objects in the store never
+  surface);
+* an async-upload save followed by an immediate crash restores the
+  *previous* checkpoint, never a partial one.
+
+Exercised over both backends: ``FileStore`` (filesystem) and
+``TieredCheckpointStore`` over the simulated multi-tier stores,
+including fault injection (``FaultyStore``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.checkpoint import (BlobCheckpointer, FileStore,
+                              TieredCheckpointStore, latest_step)
+from repro.core.stores import ExpressOneZoneStore, FaultyStore, SimulatedS3
+
+
+def _tree(seed, n=3):
+    rng = np.random.default_rng(seed)
+    return {"w": [rng.standard_normal((4, 5)).astype(np.float32)
+                  for _ in range(n)],
+            "count": np.asarray(seed, np.int32)}
+
+
+def _stores(tmp_path):
+    return {
+        "file": FileStore(str(tmp_path / "ckpt")),
+        "tiered-s3": TieredCheckpointStore(SimulatedS3(seed=1)),
+        "tiered-faulty": TieredCheckpointStore(
+            FaultyStore(ExpressOneZoneStore(seed=2, num_az=3), seed=3,
+                        transient_p=0.25)),
+    }
+
+
+@pytest.mark.parametrize("kind", ["file", "tiered-s3", "tiered-faulty"])
+def test_crash_before_manifest_is_invisible_and_collected(tmp_path, kind):
+    store = _stores(tmp_path)[kind]
+    ck = BlobCheckpointer(store, async_upload=False)
+    ck.save(1, _tree(1))
+    ck.save(2, _tree(2), crash_before_manifest=True)  # orphaned blobs
+
+    # the half-written step is invisible: manifests only
+    assert latest_step(store) == 1
+    assert ck.manifest(2) is None
+    with pytest.raises(FileNotFoundError):
+        ck.restore(2, _tree(0))
+
+    # retention collects exactly the orphans; the committed step survives
+    removed = store.run_retention()
+    assert removed == len(_tree(2)["w"]) + 1
+    restored = ck.restore(1, _tree(0))
+    for a, b in zip(restored["w"], _tree(1)["w"]):
+        np.testing.assert_array_equal(a, b)
+    assert store.run_retention() == 0  # idempotent
+
+
+def test_restore_trusts_manifests_only(tmp_path):
+    store = FileStore(str(tmp_path / "ckpt"))
+    ck = BlobCheckpointer(store, async_upload=False)
+    ck.save(5, _tree(5))
+    # stray objects in the store (a concurrent writer's debris) must not
+    # surface through any read path
+    store.put("step00000007_leaf00000.npy", b"\x00" * 80)
+    store.put("unrelated-junk.bin", b"junk")
+    assert latest_step(store) == 5
+    with pytest.raises(FileNotFoundError):
+        ck.restore(7, _tree(0))
+    removed = store.run_retention()
+    assert removed == 2  # both strays collected, step-5 blobs kept
+    restored = ck.restore(5, _tree(0))
+    np.testing.assert_array_equal(restored["count"], np.asarray(5, np.int32))
+
+
+def test_async_save_then_crash_restores_previous(tmp_path):
+    store = TieredCheckpointStore(SimulatedS3(seed=9))
+    ck = BlobCheckpointer(store, async_upload=True)
+    ck.save(1, _tree(1))
+    ck.wait()
+    # async upload in flight, process dies before the manifest commit
+    ck.save(2, _tree(2), crash_before_manifest=True)
+    ck.wait()
+
+    ck2 = BlobCheckpointer(store, async_upload=True)  # "restarted" process
+    assert latest_step(store) == 1
+    restored = ck2.restore(1, _tree(0))
+    for a, b in zip(restored["w"], _tree(1)["w"]):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_tiered_store_retries_transient_faults_and_bills_time():
+    base = SimulatedS3(seed=11)
+    store = TieredCheckpointStore(FaultyStore(base, seed=13,
+                                              transient_p=0.4),
+                                  clock=lambda: 42.0)
+    ck = BlobCheckpointer(store, async_upload=False)
+    tree = {"x": np.arange(12, dtype=np.float32).reshape(3, 4)}
+    for step in range(1, 4):       # enough ops that faults certainly hit
+        ck.save(step, tree, extra={"next_step": step, "offsets": {0: 7}})
+        ck.restore(step, {"x": np.zeros((3, 4), np.float32)})
+    ck.save(3, tree, extra={"next_step": 3, "offsets": {0: 7}})
+    assert store.retries > 0  # fault injection was actually live
+    m = ck.manifest(3)
+    assert m["extra"]["next_step"] == 3
+    restored = ck.restore(3, {"x": np.zeros((3, 4), np.float32)})
+    np.testing.assert_array_equal(restored["x"], tree["x"])
+
+
+def test_manifest_extra_roundtrip_and_default(tmp_path):
+    store = FileStore(str(tmp_path / "ckpt"))
+    ck = BlobCheckpointer(store, async_upload=False)
+    ck.save(1, _tree(1))                       # no extra given
+    ck.save(2, _tree(2), extra={"offsets": {"3": 14}})
+    assert ck.manifest(1)["extra"] == {}
+    assert ck.manifest(2)["extra"] == {"offsets": {"3": 14}}

@@ -1,0 +1,180 @@
+"""The shuffle engine as a training data source (``repro.train_input``).
+
+Covers the pieces the benchmark gates lean on, individually:
+
+* the step-keyed record codec roundtrips and the assembled batch equals
+  the engine-free reference;
+* ``ShuffleFedInput`` serves every step's batch exactly once, in order,
+  bit-equal to the reference, with committed offsets accounting for
+  every delivered record;
+* ``fast_forward`` resumes a fresh engine replay to the committed
+  boundary: identical batches, cross-checked offsets, and a loud
+  failure on a manifest/replay mismatch;
+* delivery stays exactly-once through fault injection and an AZ outage;
+* the sharded input specs validate on a real device batch.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import AsyncShuffleEngine, BlobShuffleConfig, EngineConfig
+from repro.core.stores import ExpressOneZoneStore, FaultyStore, SimulatedS3
+from repro.train_input import (ShuffleFedInput, TokenStreamConfig,
+                               assemble_batch, decode_record,
+                               reference_batch, step_records, step_tokens)
+
+STREAM = TokenStreamConfig(vocab_size=997, batch=4, seq_len=16, seed=3)
+
+
+def _engine(store=None, **kw):
+    bcfg = BlobShuffleConfig(batch_bytes=2048, max_interval_s=0.02,
+                             num_partitions=5, num_az=3)
+    return AsyncShuffleEngine(
+        bcfg, EngineConfig(commit_interval_s=0.05), n_instances=2,
+        store=store or SimulatedS3(seed=1), seed=2, exactly_once=True, **kw)
+
+
+# -- codec ---------------------------------------------------------------
+
+
+def test_record_codec_roundtrip():
+    recs = step_records(STREAM, step=6).to_records()
+    assert len(recs) == STREAM.batch
+    toks = step_tokens(STREAM, 6)
+    for row, rec in enumerate(recs):
+        s, r, vals = decode_record(rec)
+        assert (s, r) == (6, row)
+        np.testing.assert_array_equal(vals, toks[row])
+
+
+def test_assemble_matches_reference_and_shifts_labels():
+    rows = {r: step_tokens(STREAM, 2)[r] for r in range(STREAM.batch)}
+    batch = assemble_batch(STREAM, rows)
+    ref = reference_batch(STREAM, 2)
+    np.testing.assert_array_equal(batch["tokens"], ref["tokens"])
+    np.testing.assert_array_equal(batch["labels"], ref["labels"])
+    # next-token prediction: labels are the tokens shifted by one
+    np.testing.assert_array_equal(batch["tokens"][:, 1:],
+                                  batch["labels"][:, :-1])
+
+
+def test_assemble_rejects_missing_rows():
+    rows = {0: step_tokens(STREAM, 0)[0]}
+    with pytest.raises(ValueError, match="missing"):
+        assemble_batch(STREAM, rows)
+
+
+# -- pipeline ------------------------------------------------------------
+
+
+def test_pipeline_serves_reference_batches_exactly_once():
+    pipe = ShuffleFedInput(_engine(), STREAM, steps=6, step_interval_s=0.05)
+    pipe.submit()
+    for s in range(6):
+        got, batch, _ = pipe.next_batch()
+        assert got == s
+        ref = reference_batch(STREAM, s)
+        np.testing.assert_array_equal(batch["tokens"], ref["tokens"])
+        np.testing.assert_array_equal(batch["labels"], ref["labels"])
+    with pytest.raises(StopIteration):
+        pipe.next_batch()
+    pipe.commit(6)
+    # offsets account for every delivered record exactly once
+    assert sum(pipe.offsets().values()) == 6 * STREAM.batch
+    assert pipe.duplicate_rows == 0
+    pipe.finish()
+
+
+def test_pipeline_overlap_prefetch():
+    pipe = ShuffleFedInput(_engine(), STREAM, steps=6, prefetch_steps=3,
+                           step_interval_s=0.05)
+    pipe.submit()
+    hits = sum(pipe.next_batch()[2] for _ in range(6))
+    assert pipe.requests == 6
+    # first request blocks; the double buffer should absorb most others
+    assert hits >= 3
+    assert pipe.prefetch_hits == hits
+
+
+def test_fast_forward_resume_is_bit_identical():
+    first = ShuffleFedInput(_engine(), STREAM, steps=6, step_interval_s=0.05)
+    first.submit()
+    batches = [first.next_batch()[1] for _ in range(6)]
+    first.commit(4)
+    offsets = first.offsets()
+
+    # "restart": fresh engine from the same factory, replay and drop the
+    # committed prefix, cross-check offsets against the "manifest"
+    second = ShuffleFedInput(_engine(), STREAM, steps=6,
+                             step_interval_s=0.05)
+    second.submit()
+    second.fast_forward(4, offsets)
+    assert second.skipped_rows == 4 * STREAM.batch
+    for s in (4, 5):
+        got, batch, _ = second.next_batch()
+        assert got == s
+        np.testing.assert_array_equal(batch["tokens"],
+                                      batches[s]["tokens"])
+
+
+def test_fast_forward_detects_offset_divergence():
+    pipe = ShuffleFedInput(_engine(), STREAM, steps=6, step_interval_s=0.05)
+    pipe.submit()
+    with pytest.raises(RuntimeError, match="diverged"):
+        pipe.fast_forward(4, {0: 9999})
+
+
+def test_fast_forward_requires_fresh_pipeline():
+    pipe = ShuffleFedInput(_engine(), STREAM, steps=4, step_interval_s=0.05)
+    pipe.submit()
+    pipe.next_batch()
+    with pytest.raises(RuntimeError, match="before consumption"):
+        pipe.fast_forward(2)
+
+
+def test_pipeline_exactly_once_through_faults_and_outage():
+    from repro.cluster import ElasticCluster
+
+    def make():
+        store = FaultyStore(ExpressOneZoneStore(seed=5, num_az=3), seed=7,
+                            transient_p=0.05)
+        eng = _engine(store=store)
+        cluster = ElasticCluster(eng, mode="cooperative")
+        cluster.az_outage_at(0.12, 1)
+        return eng
+
+    pipe = ShuffleFedInput(make(), STREAM, steps=8, step_interval_s=0.05)
+    pipe.submit()
+    for s in range(8):
+        got, batch, _ = pipe.next_batch()
+        assert got == s
+        np.testing.assert_array_equal(batch["tokens"],
+                                      reference_batch(STREAM, s)["tokens"])
+    pipe.commit(8)
+    assert sum(pipe.offsets().values()) == 8 * STREAM.batch
+
+
+# -- sharded input specs -------------------------------------------------
+
+
+def test_device_batch_validates_against_input_specs():
+    from repro.configs import get_config
+    from repro.launch import make_test_mesh
+    from repro.train_input import input_spec_report, validate_device_batch
+
+    cfg = get_config("deepseek-v2-lite-16b", smoke=True)
+    stream = TokenStreamConfig(vocab_size=cfg.vocab_size, batch=4,
+                               seq_len=16, seed=0)
+    mesh = make_test_mesh(devices=1)
+    pipe = ShuffleFedInput(_engine(), stream, steps=1, mesh=mesh,
+                           model_cfg=cfg, step_interval_s=0.05)
+    pipe.submit()
+    _, batch, _ = pipe.next_batch()
+    report = validate_device_batch(batch, cfg, pipe.shape, mesh)
+    assert report == input_spec_report(cfg, pipe.shape, mesh)
+    assert report["tokens"]["global_shape"] == [4, 16]
+
+    # a wrongly-shaped batch must fail loudly
+    with pytest.raises(AssertionError):
+        validate_device_batch({"tokens": batch["tokens"]}, cfg,
+                              pipe.shape, mesh)

@@ -1,0 +1,96 @@
+#!/usr/bin/env python
+"""Docs lane: intra-repo markdown link check + docstring examples.
+
+Two passes, both blocking in CI (.github/workflows/ci.yml, job ``docs``):
+
+1. every relative link/image in every tracked ``*.md`` must resolve to a
+   file or directory inside the repo (``#fragment`` suffixes are
+   stripped; ``http(s)://`` / ``mailto:`` targets are skipped — this is
+   a link checker for the repo's own docs, not the internet);
+2. every module under ``src/`` whose source contains a ``>>>`` example
+   is run through ``doctest`` — executable documentation must execute.
+
+Run locally from the repo root: ``python tools/check_docs.py``.
+"""
+
+from __future__ import annotations
+
+import doctest
+import importlib
+import os
+import re
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# [text](target) and ![alt](target); target up to the first unescaped ')'
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+
+
+def _tracked(suffix: str):
+    out = subprocess.run(["git", "ls-files", f"*{suffix}"], cwd=ROOT,
+                         capture_output=True, text=True, check=True)
+    return [p for p in out.stdout.splitlines() if p]
+
+
+def check_links() -> list:
+    errors = []
+    for md in _tracked(".md"):
+        base = os.path.dirname(os.path.join(ROOT, md))
+        with open(os.path.join(ROOT, md), encoding="utf-8") as f:
+            text = f.read()
+        # fenced code blocks routinely show link-shaped syntax; skip them
+        text = re.sub(r"```.*?```", "", text, flags=re.S)
+        for m in _LINK.finditer(text):
+            target = m.group(1)
+            if target.startswith(("http://", "https://", "mailto:")):
+                continue
+            path = target.split("#", 1)[0]
+            if not path:          # pure in-page anchor
+                continue
+            resolved = os.path.normpath(os.path.join(base, path))
+            if not os.path.exists(resolved):
+                errors.append(f"{md}: broken link -> {target}")
+    return errors
+
+
+def check_doctests() -> list:
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    errors = []
+    ran = 0
+    for py in _tracked(".py"):
+        if not py.startswith("src/"):
+            continue
+        with open(os.path.join(ROOT, py), encoding="utf-8") as f:
+            if ">>> " not in f.read():
+                continue
+        mod_name = py[len("src/"):-len(".py")].replace("/", ".")
+        if mod_name.endswith(".__init__"):
+            mod_name = mod_name[:-len(".__init__")]
+        try:
+            mod = importlib.import_module(mod_name)
+            res = doctest.testmod(mod, verbose=False)
+        except Exception as e:  # import or doctest harness failure
+            errors.append(f"{py}: doctest run failed: {e!r}")
+            continue
+        ran += res.attempted
+        if res.failed:
+            errors.append(f"{py}: {res.failed}/{res.attempted} "
+                          f"doctest(s) failed")
+    print(f"doctests: {ran} example(s) executed")
+    return errors
+
+
+def main() -> int:
+    errors = check_links() + check_doctests()
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    if errors:
+        return 1
+    print("docs OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
